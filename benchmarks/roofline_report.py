@@ -1,0 +1,41 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json and prints CSV:
+arch,shape,mesh,rules,dominant,compute_s,memory_s,collective_s,
+model_flops_ratio,bytes_per_device,collective_bytes
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def load(art_dir="artifacts/dryrun"):
+    recs = []
+    for p in sorted(pathlib.Path(art_dir).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def main(quick: bool = False, art_dir="artifacts/dryrun"):
+    recs = load(art_dir)
+    print(
+        "arch,shape,mesh,rules,dominant,compute_s,memory_s,collective_s,"
+        "useful_flops_ratio,bytes_per_device,collective_bytes"
+    )
+    for r in recs:
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        print(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['rules']},{t['dominant']},"
+            f"{t['compute_s']:.4e},{t['memory_s']:.4e},{t['collective_s']:.4e},"
+            f"{(ratio if ratio is not None else float('nan')):.3f},"
+            f"{r['bytes_per_device']:.3e},{t['collective_bytes']:.3e}"
+        )
+    if not recs:
+        print("# no artifacts found - run: python -m repro.launch.dryrun --all")
+
+
+if __name__ == "__main__":
+    main()

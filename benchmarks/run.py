@@ -1,0 +1,53 @@
+"""Benchmark entrypoint: one section per paper table/figure + system extras.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Sections:
+  fig2      staleness vs K (paper Fig. 2)
+  fig3      accuracy vs global cycles (paper Fig. 3)
+  solvers   analytic SAI vs numerical solvers (Sec. IV/V)
+  kernels   hot-spot micro-benchmarks
+  roofline  per (arch x shape x mesh) roofline terms from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    accuracy_vs_cycles,
+    kernel_bench,
+    roofline_report,
+    solver_table,
+    staleness_vs_k,
+)
+
+SECTIONS = [
+    ("fig2_staleness_vs_k", staleness_vs_k.main),
+    ("solver_table", solver_table.main),
+    ("kernel_bench", kernel_bench.main),
+    ("roofline_report", roofline_report.main),
+    ("fig3_accuracy_vs_cycles", accuracy_vs_cycles.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps (slow)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    for name, fn in SECTIONS:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        fn(quick=quick)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

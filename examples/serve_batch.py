@@ -1,0 +1,33 @@
+"""Serve a small model with batched requests: prefill a batch of prompts,
+then decode tokens with the KV/state cache — runs any of the 10 assigned
+architectures in its reduced form on CPU.
+
+  PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-7b --gen 12
+"""
+
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    # the serving loop lives in the launcher; this example drives it the way
+    # an operator would
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", args.arch, "--reduced",
+        "--batch", str(args.batch),
+        "--prompt-len", str(args.prompt_len),
+        "--gen", str(args.gen),
+    ]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Pytree checkpointing to .npz (orbax-free, offline-friendly).
+
+Leaves are flattened with their key paths as archive names; restore
+rebuilds into the provided template tree (so dtypes/structure are always
+validated against what the model expects).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "save_metadata", "load_metadata"]
+
+_SEP = "::"
+
+
+def _path_str(path) -> str:
+    return _SEP.join(str(jax.tree_util.keystr((k,))) for k in path)
+
+
+def save(path: str | pathlib.Path, tree, *, step: int | None = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    np.savez(path, **arrays)
+    if step is not None:
+        save_metadata(path.with_suffix(".json"), {"step": step})
+
+
+def restore(path: str | pathlib.Path, template):
+    path = pathlib.Path(path)
+    with np.load(path, allow_pickle=False) as z:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, tmpl in flat:
+            key = _path_str(p)
+            if key not in z:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = z[key]
+            if tuple(arr.shape) != tuple(np.shape(tmpl)):
+                raise ValueError(f"{key}: shape {arr.shape} != template {np.shape(tmpl)}")
+            leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_metadata(path, meta: dict) -> None:
+    pathlib.Path(path).write_text(json.dumps(meta))
+
+
+def load_metadata(path) -> dict:
+    return json.loads(pathlib.Path(path).read_text())

@@ -1,0 +1,44 @@
+"""Core contribution of the paper: staleness-aware task allocation for
+asynchronous federated mobile-edge learning."""
+
+from repro.core.allocation import Allocation, AllocationProblem
+from repro.core.aggregation import aggregate, fedavg_weights, staleness_weights
+from repro.core.baselines import solve_eta, solve_synchronous
+from repro.core.complexity import ModelCost, mlp_cost, mnist_dnn_cost, transformer_cost
+from repro.core.solver_kkt import solve as solve_kkt_sai
+from repro.core.solver_kkt import solve_relaxed, suggest_and_improve
+from repro.core.solver_numeric import solve_pgd_jax, solve_slsqp
+from repro.core.staleness import avg_staleness, max_staleness
+from repro.core.time_model import (
+    ChannelParams,
+    LearnerProfile,
+    TimeModel,
+    indoor_80211_profile,
+    pod_slice_profile,
+)
+
+__all__ = [
+    "Allocation",
+    "AllocationProblem",
+    "ChannelParams",
+    "LearnerProfile",
+    "ModelCost",
+    "TimeModel",
+    "aggregate",
+    "avg_staleness",
+    "fedavg_weights",
+    "indoor_80211_profile",
+    "max_staleness",
+    "mlp_cost",
+    "mnist_dnn_cost",
+    "pod_slice_profile",
+    "solve_eta",
+    "solve_kkt_sai",
+    "solve_pgd_jax",
+    "solve_relaxed",
+    "solve_slsqp",
+    "solve_synchronous",
+    "staleness_weights",
+    "suggest_and_improve",
+    "transformer_cost",
+]

@@ -1,0 +1,55 @@
+"""Model aggregation rules for asynchronous MEL (paper Sec. II + ref [10]).
+
+The orchestrator receives K locally-updated models {w_k}, each trained for
+tau_k epochs on d_k samples, and produces the next global model.
+
+* ``fedavg_weights``   — classic data-weighted averaging (alpha_k = d_k / d).
+* ``staleness_weights``— staleness-aware async-SGD (ref [10]): learners whose
+  tau_k lags the fleet maximum contribute *fresher* gradients less stale, so
+  each is weighted by d_k / (1 + s_k) where s_k = tau_max - tau_k, then
+  renormalized. With zero staleness this reduces to FedAvg exactly.
+* ``aggregate``        — jit-compiled weighted pytree sum (the fused Pallas
+  kernel in repro.kernels.fed_agg implements the same contraction for the
+  TPU hot path; this is the jnp composition).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["fedavg_weights", "staleness_weights", "aggregate", "aggregate_stacked"]
+
+
+def fedavg_weights(d: np.ndarray) -> np.ndarray:
+    d = np.asarray(d, dtype=float)
+    return d / d.sum()
+
+
+def staleness_weights(tau: np.ndarray, d: np.ndarray, *, gamma: float = 1.0) -> np.ndarray:
+    """alpha_k ∝ d_k / (1 + gamma * (tau_max - tau_k)); renormalized."""
+    tau = np.asarray(tau, dtype=float)
+    d = np.asarray(d, dtype=float)
+    s = tau.max() - tau
+    w = d / (1.0 + gamma * s)
+    return w / w.sum()
+
+
+@jax.jit
+def aggregate(models, weights):
+    """Weighted sum of a list-of-pytrees along the learner axis.
+
+    ``models`` is a pytree whose leaves have a leading learner axis K
+    (stacked local models); ``weights`` is shape (K,)."""
+    weights = jnp.asarray(weights)
+
+    def wsum(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return (leaf * w).sum(axis=0)
+
+    return jax.tree_util.tree_map(wsum, models)
+
+
+# alias that documents the stacked-leading-axis contract
+aggregate_stacked = aggregate

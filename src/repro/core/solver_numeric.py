@@ -1,0 +1,193 @@
+"""Numerical solvers for the relaxed QCLP (paper Sec. IV compares the
+analytic SAI solution against off-the-shelf NLP solvers).
+
+Two implementations:
+
+1. ``solve_slsqp`` — scipy SLSQP on the full relaxed program (Eq. 8):
+   variables x = [tau_1..tau_K, d_1..d_K, z], objective z, quadratic
+   equality constraints t_k = T, linear sum constraint, pairwise staleness
+   inequalities. This mirrors the paper's use of OPTI/fmincon/IPOPT.
+
+2. ``solve_pgd_jax`` — a jit-compiled projected-gradient/penalty solver.
+   The time equalities are eliminated exactly through tau_k(d_k); d_k is
+   parameterized as d_l + (d_u - d_l) * sigmoid(theta_k) so the box
+   constraint always holds; the sum constraint and the (smoothed) max-min
+   staleness objective go into the loss. ``vmap``-able across problem
+   batches: this is the production path when an orchestrator must re-solve
+   allocation for thousands of learner fleets per scheduling tick.
+
+Both return continuous solutions which are then integerized with the same
+SAI repair as the analytic path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import Allocation, AllocationProblem
+from repro.core.solver_kkt import suggest_and_improve
+
+__all__ = ["solve_slsqp", "solve_pgd_jax", "pgd_relaxed_batch"]
+
+
+# ---------------------------------------------------------------------------
+# scipy SLSQP on the full relaxed program
+# ---------------------------------------------------------------------------
+
+def solve_slsqp(prob: AllocationProblem, *, max_iter: int = 300) -> Allocation:
+    from scipy.optimize import minimize
+
+    tm = prob.time_model
+    k = prob.num_learners
+    # init from equal allocation
+    d0 = np.full(k, prob.total_samples / k)
+    d0 = np.clip(d0, prob.d_lower, prob.d_upper)
+    tau0 = np.maximum(tm.tau_of_d(d0, prob.T), 0.0)
+    z0 = float(tau0.max() - tau0.min())
+    x0 = np.concatenate([tau0, d0, [z0]])
+
+    def split(x):
+        return x[:k], x[k : 2 * k], x[-1]
+
+    def objective(x):
+        return x[-1]
+
+    def obj_grad(x):
+        g = np.zeros_like(x)
+        g[-1] = 1.0
+        return g
+
+    cons = []
+
+    def time_con(x):
+        tau, d, _ = split(x)
+        return tm.c2 * tau * d + tm.c1 * d + tm.c0 - prob.T
+
+    cons.append({"type": "eq", "fun": time_con})
+    cons.append({"type": "eq", "fun": lambda x: x[k : 2 * k].sum() - prob.total_samples})
+
+    def staleness_con(x):
+        tau, _, z = split(x)
+        diff = tau[:, None] - tau[None, :]
+        iu = np.triu_indices(k, 1)
+        pair = diff[iu]
+        return np.concatenate([z - pair, z + pair])
+
+    cons.append({"type": "ineq", "fun": staleness_con})
+
+    bounds = (
+        [(0.0, None)] * k
+        + [(float(prob.d_lower), float(prob.d_upper))] * k
+        + [(0.0, None)]
+    )
+    res = minimize(
+        objective,
+        x0,
+        jac=obj_grad,
+        bounds=bounds,
+        constraints=cons,
+        method="SLSQP",
+        options={"maxiter": max_iter, "ftol": 1e-10},
+    )
+    tau_r, d_r, _ = split(res.x)
+    tau, d, it_sai = suggest_and_improve(prob, d_r)
+    alloc = Allocation(
+        tau=tau,
+        d=d,
+        method="slsqp_sai",
+        relaxed_tau=tau_r,
+        relaxed_d=d_r,
+        solver_iters=int(res.nit) + it_sai,
+    )
+    alloc.validate(prob)
+    return alloc
+
+
+# ---------------------------------------------------------------------------
+# JAX projected-gradient / penalty solver (batched, jit)
+# ---------------------------------------------------------------------------
+
+def _project_sum_box(d, d_lo, d_hi, total, iters: int = 16):
+    """Alternating projection onto {sum d = total} intersect [d_lo, d_hi]^K
+    (Dykstra-free variant; converges because both sets are closed convex)."""
+
+    def body(d, _):
+        gap = total - d.sum()
+        free = jnp.where(gap > 0, d < d_hi - 1e-9, d > d_lo + 1e-9).astype(d.dtype)
+        w = free / jnp.maximum(free.sum(), 1.0)
+        return jnp.clip(d + gap * w, d_lo, d_hi), None
+
+    d, _ = jax.lax.scan(body, d, None, length=iters)
+    return d
+
+
+def _staleness_loss(d, c2, c1, c0, T, smooth):
+    tau = jnp.maximum((T - c0 - c1 * d) / (c2 * d), 0.0)
+    smax = smooth * jax.nn.logsumexp(tau / smooth)
+    smin = -smooth * jax.nn.logsumexp(-tau / smooth)
+    return smax - smin
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _pgd_run(d0, c2, c1, c0, T, d_lo, d_hi, total, steps: int):
+    """Projected gradient descent in d-space with annealed smoothing."""
+
+    def step(d, i):
+        frac = i / steps
+        smooth = 10.0 ** (0.0 - 2.0 * frac)            # 1.0 -> 0.01
+        g = jax.grad(_staleness_loss)(d, c2, c1, c0, T, smooth)
+        gnorm = jnp.linalg.norm(g) + 1e-12
+        lr = 0.05 * (d_hi - d_lo) * (1.0 - 0.9 * frac)
+        d = d - lr * g / gnorm
+        d = _project_sum_box(d, d_lo, d_hi, total)
+        return d, None
+
+    d, _ = jax.lax.scan(step, d0, jnp.arange(steps))
+    d = _project_sum_box(d, d_lo, d_hi, total, iters=64)
+    tau = jnp.maximum((T - c0 - c1 * d) / (c2 * d), 0.0)
+    return tau, d
+
+
+# vmap across a batch of allocation problems (fleet-scale scheduling tick)
+pgd_relaxed_batch = jax.vmap(
+    lambda d0, c2, c1, c0, T, d_lo, d_hi, total: _pgd_run(
+        d0, c2, c1, c0, T, d_lo, d_hi, total, 600
+    ),
+    in_axes=(0, 0, 0, 0, 0, 0, 0, 0),
+)
+
+
+def solve_pgd_jax(prob: AllocationProblem, *, steps: int = 600) -> Allocation:
+    tm = prob.time_model
+    k = prob.num_learners
+    d0 = jnp.full(k, prob.total_samples / k, dtype=jnp.float32)
+    d0 = jnp.clip(d0, prob.d_lower, prob.d_upper)
+    tau_r, d_r = _pgd_run(
+        d0,
+        jnp.asarray(tm.c2),
+        jnp.asarray(tm.c1),
+        jnp.asarray(tm.c0),
+        float(prob.T),
+        float(prob.d_lower),
+        float(prob.d_upper),
+        float(prob.total_samples),
+        steps,
+    )
+    tau_r = np.asarray(tau_r, dtype=float)
+    d_r = np.asarray(d_r, dtype=float)
+    tau, d, it_sai = suggest_and_improve(prob, d_r)
+    alloc = Allocation(
+        tau=tau,
+        d=d,
+        method="pgd_jax_sai",
+        relaxed_tau=tau_r,
+        relaxed_d=d_r,
+        solver_iters=steps + it_sai,
+    )
+    alloc.validate(prob)
+    return alloc

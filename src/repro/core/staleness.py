@@ -1,0 +1,45 @@
+"""Staleness metrics (paper Eqs. 6 and 13).
+
+Staleness between learners k and l is |tau_k - tau_l|: the gap in the
+number of local updates performed inside one global cycle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["pair_matrix", "max_staleness", "avg_staleness", "staleness_profile"]
+
+
+def pair_matrix(k: int) -> np.ndarray:
+    """The paper's matrix c in R^{N x 2}, N = C(K,2) (Eq. 10): all (k, l)
+    index pairs with l > k, 0-based."""
+    pairs = [(a, b) for a in range(k) for b in range(a + 1, k)]
+    return np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+
+
+def max_staleness(tau: np.ndarray) -> int:
+    """s = max_{k<l} |tau_k - tau_l|  (Eq. 6, max over all pairs)."""
+    tau = np.asarray(tau)
+    if tau.size < 2:
+        return 0
+    return int(np.max(tau) - np.min(tau))
+
+
+def avg_staleness(tau: np.ndarray) -> float:
+    """s_avg = (1/N) sum_n |tau_{c_n,1} - tau_{c_n,2}|  (Eq. 13)."""
+    tau = np.asarray(tau, dtype=float)
+    if tau.size < 2:
+        return 0.0
+    diff = np.abs(tau[:, None] - tau[None, :])
+    n = tau.size
+    return float(diff[np.triu_indices(n, k=1)].mean())
+
+
+def staleness_profile(tau: np.ndarray) -> dict:
+    return {
+        "max": max_staleness(tau),
+        "avg": avg_staleness(tau),
+        "tau_min": int(np.min(tau)) if np.asarray(tau).size else 0,
+        "tau_max": int(np.max(tau)) if np.asarray(tau).size else 0,
+    }

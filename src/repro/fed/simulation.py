@@ -1,0 +1,116 @@
+"""End-to-end MEL experiment driver (reproduces the paper's Figs. 2-3).
+
+Builds the 802.11 indoor environment, derives the time-model coefficients
+from the paper's exact MNIST-DNN constants (S_m = 8,974,080 bits,
+C_m = 1,123,736 FLOPs/sample), allocates with the requested scheme, and
+runs asynchronous federated training on synthetic MNIST-class data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+
+from repro.core import (
+    AllocationProblem,
+    TimeModel,
+    indoor_80211_profile,
+    mnist_dnn_cost,
+)
+from repro.data.pipeline import Dataset, synthetic_mnist
+from repro.fed.orchestrator import MELConfig, Orchestrator, SCHEMES
+from repro.models import mlp
+
+__all__ = ["build_problem", "run_experiment", "staleness_sweep"]
+
+
+def build_problem(
+    k: int,
+    T: float,
+    *,
+    total_samples: int = 6000,
+    d_lower_frac: float = 0.25,
+    d_upper_frac: float = 3.0,
+    seed: int = 0,
+) -> AllocationProblem:
+    cost = mnist_dnn_cost()
+    profiles = indoor_80211_profile(k, seed=seed)
+    tm = TimeModel.build(
+        profiles,
+        model_complexity_flops=cost.flops_per_sample,
+        model_size_bits=cost.model_bits,
+    )
+    d_l = max(1, int(d_lower_frac * total_samples / k))
+    d_u = min(total_samples, int(d_upper_frac * total_samples / k))
+    return AllocationProblem(
+        time_model=tm, T=T, total_samples=total_samples, d_lower=d_l, d_upper=d_u
+    )
+
+
+def staleness_sweep(ks, T: float, *, schemes=("kkt_sai", "slsqp", "eta"), seed: int = 0,
+                    total_samples: int = 6000) -> list[dict]:
+    """Fig. 2: max/avg staleness vs number of learners K per scheme."""
+    rows = []
+    for k in ks:
+        prob = build_problem(k, T, seed=seed, total_samples=total_samples)
+        for scheme in schemes:
+            try:
+                alloc = SCHEMES[scheme](prob)
+                s = alloc.summary(prob)
+                rows.append({
+                    "K": k, "T": T, "scheme": scheme,
+                    "max_staleness": s["max_staleness"],
+                    "avg_staleness": s["avg_staleness"],
+                    "total_updates": s["total_updates"],
+                })
+            except ValueError as e:
+                rows.append({"K": k, "T": T, "scheme": scheme, "error": str(e)})
+    return rows
+
+
+def run_experiment(
+    *,
+    k: int = 10,
+    T: float = 15.0,
+    cycles: int = 12,
+    scheme: str = "kkt_sai",
+    aggregation: str = "staleness",
+    total_samples: int = 6000,
+    lr: float = 0.1,
+    seed: int = 0,
+    train: Dataset | None = None,
+    test: Dataset | None = None,
+) -> dict:
+    """One full MEL run; returns history with accuracy per global cycle."""
+    if train is None or test is None:
+        train, test = synthetic_mnist(max(total_samples * 2, 12_000), seed=seed)
+    prob = build_problem(k, T, total_samples=total_samples, seed=seed)
+    mel = MELConfig(
+        T=T, total_samples=total_samples, lr=lr, scheme=scheme, aggregation=aggregation
+    )
+    params = mlp.init(jax.random.key(seed))
+    orch = Orchestrator(mel, prob, mlp.loss, params, seed=seed)
+
+    eval_fn = functools.partial(_accuracy, x=test.x[:2000], y=test.y[:2000])
+    history = orch.run(train, cycles, eval_fn=eval_fn)
+    return {
+        "scheme": scheme,
+        "K": k,
+        "T": T,
+        "history": history,
+        "final_accuracy": history[-1]["accuracy"],
+        "allocation": orch.allocation.summary(prob),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _acc_jit(params, x, y):
+    return mlp.accuracy(params, x, y)
+
+
+def _accuracy(params, *, x, y):
+    return _acc_jit(params, x, y)

@@ -1,0 +1,75 @@
+"""Jit'd dispatch wrappers for the compute hot spots.
+
+Every op has two backends:
+  * pure-jnp reference (``repro.kernels.ref`` / ``repro.models.layers``) —
+    the default on CPU and the oracle the Pallas kernels are tested against;
+  * a Pallas TPU kernel (``use_pallas=True``) with explicit BlockSpec VMEM
+    tiling — the deployment path on real hardware. On CPU the kernels run
+    in ``interpret=True`` mode (tests) only.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["flash_attention", "wkv6", "fed_agg", "swiglu_fused", "mamba_scan"]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, chunk=512,
+                    use_pallas=False, interpret=False, p_bf16=False, q_block=0):
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, interpret=interpret
+        )
+    from repro.models.layers import flash_attention as ref
+
+    return ref(q, k, v, causal=causal, window=window, chunk=chunk,
+               p_bf16=p_bf16, q_block=q_block)
+
+
+def wkv6(r, k, v, w, u, s0=None, *, use_pallas=False, interpret=False, unroll=1,
+         backend="scan", chunk=16):
+    if use_pallas:
+        from repro.kernels.wkv6 import wkv6_pallas
+
+        return wkv6_pallas(r, k, v, w, u, s0=s0, interpret=interpret)
+    if backend == "chunked":
+        from repro.models.rwkv6 import wkv_chunked
+
+        return wkv_chunked(r, k, v, w, u, s0=s0, chunk=chunk)
+    from repro.models.rwkv6 import wkv_scan
+
+    return wkv_scan(r, k, v, w, u, s0=s0, unroll=unroll)
+
+
+def fed_agg(stacked, weights, *, use_pallas=False, interpret=False):
+    """Weighted sum over the leading learner axis of a stacked tensor."""
+    if use_pallas:
+        from repro.kernels.fed_agg import fed_agg_pallas
+
+        return fed_agg_pallas(stacked, weights, interpret=interpret)
+    w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(jnp.float32)
+    return (stacked.astype(jnp.float32) * w).sum(axis=0).astype(stacked.dtype)
+
+
+def swiglu_fused(x, w_gate, w_up, w_down, *, use_pallas=False, interpret=False):
+    if use_pallas:
+        from repro.kernels.swiglu import swiglu_pallas
+
+        return swiglu_pallas(x, w_gate, w_up, w_down, interpret=interpret)
+    from repro.models.layers import swiglu as ref
+
+    return ref(x, w_gate, w_up, w_down)
+
+
+def mamba_scan(dt, x, b, c, a, h0=None, *, use_pallas=False, interpret=False):
+    """Selective scan: state-resident Pallas kernel on TPU, lax.scan ref."""
+    if use_pallas:
+        from repro.kernels.mamba_scan import mamba_scan_pallas
+
+        return mamba_scan_pallas(dt, x, b, c, a, h0=h0, interpret=interpret)
+    from repro.kernels.ref import mamba_scan_ref
+
+    return mamba_scan_ref(dt, x, b, c, a, h0=h0)

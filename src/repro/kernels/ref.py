@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract the kernel
+tests `assert_allclose` against)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "wkv6_ref", "fed_agg_ref", "swiglu_ref", "mamba_scan_ref"]
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """O(S^2) dense attention with explicit masking (NOT the chunked scan —
+    an independent formulation so the two implementations cross-check)."""
+    b, sq, h, d = q.shape
+    _, skv, kv, _ = k.shape
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k.astype(jnp.float32)) / jnp.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    from repro.models.rwkv6 import wkv_scan
+
+    return wkv_scan(r, k, v, w, u, s0=s0)
+
+
+def fed_agg_ref(stacked, weights):
+    w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(jnp.float32)
+    return (stacked.astype(jnp.float32) * w).sum(axis=0).astype(stacked.dtype)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    from repro.models.layers import swiglu
+
+    return swiglu(x, w_gate, w_up, w_down)
+
+
+def mamba_scan_ref(dt, x, b, c, a, h0=None):
+    """Sequential S6 scan. dt,x: (B,S,D); b,c: (B,S,N); a: (D,N); h0: (B,D,N)."""
+    bsz, s, d = dt.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[:, :, None] * a[None])
+        h = h * da + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = tuple(t.transpose(1, 0, 2) for t in (dt, x, b, c))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2), h_last

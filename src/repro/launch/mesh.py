@@ -1,0 +1,41 @@
+"""Mesh construction for the production pod(s) and for tests.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run entrypoint sets XLA_FLAGS before importing jax; nothing
+else in the codebase ever asks for more devices than exist.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_by_name", "MESH_SPECS", "device_count_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# name -> (shape, axes); "test" variants run inside CI with 8/16 fake devices
+MESH_SPECS = {
+    "pod": ((16, 16), ("data", "model")),
+    "multipod": ((2, 16, 16), ("pod", "data", "model")),
+    "test": ((2, 4), ("data", "model")),
+    "multitest": ((2, 2, 4), ("pod", "data", "model")),
+    "cpu": ((1, 1), ("data", "model")),
+}
+
+
+def device_count_for(name: str) -> int:
+    shape, _ = MESH_SPECS[name]
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def make_mesh_by_name(name: str):
+    shape, axes = MESH_SPECS[name]
+    return jax.make_mesh(shape, axes)

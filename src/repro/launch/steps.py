@@ -1,0 +1,93 @@
+"""Step functions (train / prefill / decode) + their sharding trees.
+
+Shared by the real launcher (``train.py`` / ``serve.py``) and the multi-pod
+dry-run (``dryrun.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.model import Model
+from repro.optim.optimizers import clip_by_global_norm, get_optimizer
+from repro.sharding.rules import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    input_shardings,
+    resolve_spec,
+    tree_shardings,
+)
+
+__all__ = ["opt_state_axes", "build_train", "build_prefill", "build_decode"]
+
+
+def opt_state_axes(opt_name: str, param_axes):
+    if opt_name == "sgd":
+        return ()
+    if opt_name == "momentum":
+        return param_axes
+    return {"m": param_axes, "v": param_axes, "t": ()}
+
+
+def _replicated(mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def build_train(model: Model, mesh, rules=None, *, grad_clip: float = 1.0):
+    """Returns (step_fn, in_shardings, out_shardings, abstract_inputs_fn)."""
+    cfg = model.cfg
+    rules = rules or TRAIN_RULES
+    opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        grads, gn = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gn}
+
+    aparams = model.abstract_params()
+    aopt = jax.eval_shape(opt.init, aparams)
+    pshard = tree_shardings(model.param_axes(), aparams, mesh, rules)
+    oshard = tree_shardings(opt_state_axes(cfg.optimizer, model.param_axes()), aopt, mesh, rules)
+
+    def batch_shardings(input_specs):
+        return input_shardings(input_specs, mesh, rules)
+
+    metrics_shard = {"loss": NamedSharding(mesh, P()), "grad_norm": NamedSharding(mesh, P())}
+    return step, (pshard, oshard, batch_shardings), (pshard, oshard, metrics_shard), (aparams, aopt)
+
+
+def build_prefill(model: Model, mesh, shape: InputShape, rules=None):
+    cfg = model.cfg
+    rules = rules or SERVE_RULES
+
+    def step(params, batch):
+        return model.prefill(params, batch, max_len=shape.seq_len)
+
+    aparams = model.abstract_params()
+    pshard = tree_shardings(model.param_axes(), aparams, mesh, rules)
+
+    def batch_shardings(input_specs):
+        return input_shardings(input_specs, mesh, rules)
+
+    return step, (pshard, batch_shardings), aparams
+
+
+def build_decode(model: Model, mesh, shape: InputShape, rules=None):
+    cfg = model.cfg
+    rules = rules or SERVE_RULES
+
+    def step(params, cache, token, cache_len):
+        return model.decode(params, cache, token, cache_len)
+
+    aparams = model.abstract_params()
+    pshard = tree_shardings(model.param_axes(), aparams, mesh, rules)
+    b = shape.global_batch
+    cache_axes = model.cache_axes(b, shape.seq_len)
+    acache = model.abstract_cache(b, shape.seq_len)
+    cshard = tree_shardings(cache_axes, acache, mesh, rules)
+    tshard = NamedSharding(mesh, resolve_spec(("batch", None), (b, 1), mesh, rules))
+    lshard = NamedSharding(mesh, P())
+    return step, (pshard, cshard, tshard, lshard), (aparams, acache)

@@ -1,0 +1,136 @@
+"""Attention mixer: GQA + RoPE + optional sliding window, train/prefill/decode.
+
+Decode uses a (possibly rolling) KV cache: for sliding-window models the
+cache has exactly ``window`` slots and new KVs overwrite the oldest — this
+is what makes 500k-token decode O(window) for h2o-danube.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import decode_attention, rope
+from repro.models.params import ParamSpec
+
+__all__ = ["specs", "apply", "init_cache_specs"]
+
+
+def specs(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = cfg.pdtype()
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), dtype=dt),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype=dt),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype=dt),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"), dtype=dt),
+    }
+
+
+def cache_seq_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache_specs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    s = cache_seq_len(cfg, seq_len)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, s, kv, hd)
+    axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+    dt = cfg.cdtype()
+    return {
+        "k": ParamSpec(shape, axes, init="zeros", dtype=dt),
+        "v": ParamSpec(shape, axes, init="zeros", dtype=dt),
+    }
+
+
+def _project_qkv(cfg: ArchConfig, p, x, positions, *, use_rope: bool = True):
+    cd = cfg.cdtype()
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"].astype(cd))
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply(
+    cfg: ArchConfig,
+    p,
+    x,
+    *,
+    positions,
+    mode: str = "train",
+    cache=None,
+    cache_len=None,
+    causal: bool = True,
+    use_rope: bool = True,
+    kv_override=None,
+    use_pallas: bool = False,
+    max_len: int | None = None,
+):
+    """Run the attention mixer.
+
+    mode: "train" | "prefill" (returns cache) | "decode" (cache required).
+    kv_override: (k, v) from an encoder for cross-attention (pre-projected).
+    """
+    from repro.kernels import ops as kops
+
+    cd = cfg.cdtype()
+    if mode in ("train", "prefill"):
+        if kv_override is not None:
+            q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(cd))
+            k, v = kv_override
+            out = kops.flash_attention(
+                q, k, v, causal=False, window=None, chunk=cfg.attn_chunk,
+                use_pallas=use_pallas,
+            )
+            new_cache = None
+        else:
+            q, k, v = _project_qkv(cfg, p, x, positions, use_rope=use_rope)
+            out = kops.flash_attention(
+                q, k, v, causal=causal, window=cfg.sliding_window,
+                chunk=cfg.attn_chunk, use_pallas=use_pallas,
+                p_bf16=cfg.attn_p_bf16, q_block=cfg.attn_q_block,
+            )
+            new_cache = None
+            if mode == "prefill":
+                # build a cache laid out so that token t lives in slot
+                # t % s_cache — the invariant decode's rolling write relies on
+                s = k.shape[1]
+                s_cache = cache_seq_len(cfg, max(max_len or s, s))
+                if s_cache >= s:
+                    pad = ((0, 0), (0, s_cache - s), (0, 0), (0, 0))
+                    new_cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+                else:
+                    roll = s % s_cache
+                    new_cache = {
+                        "k": jnp.roll(k[:, -s_cache:], roll, axis=1),
+                        "v": jnp.roll(v[:, -s_cache:], roll, axis=1),
+                    }
+        y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(cd))
+        return y, new_cache
+
+    # -- decode: single token ------------------------------------------------
+    assert mode == "decode" and cache_len is not None
+    if kv_override is not None:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(cd))
+        k, v = kv_override
+        enc_len = jnp.full((), k.shape[1])
+        out = decode_attention(q, k, v, enc_len)
+        y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(cd))
+        return y, cache
+
+    assert cache is not None
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions, use_rope=use_rope)
+    s_cache = cache["k"].shape[1]
+    write_pos = (cache_len % s_cache).astype(jnp.int32)
+    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), write_pos, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), write_pos, axis=1)
+    valid = jnp.minimum(cache_len + 1, s_cache)
+    out = decode_attention(q, k_cache, v_cache, valid)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(cd))
+    return y, {"k": k_cache, "v": v_cache}

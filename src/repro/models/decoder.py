@@ -1,0 +1,327 @@
+"""Decoder trunk shared by all 10 architectures.
+
+Layer heterogeneity (Jamba's mamba/attention interleave, DeepSeek's leading
+dense layer, MoE-every-n) is handled by a **period-grouped scan**: the layer
+pattern repeats with period ``p``; params for each of the ``p`` period
+positions are stacked over ``n_periods`` and the trunk is a single
+``lax.scan`` over periods with the ``p`` heterogeneous layers unrolled
+inside the body. Compile time is therefore O(p), not O(num_layers) — this
+is what keeps the 80-layer InternVL2 dry-run tractable.
+
+Params tree:
+  embed            (V, d)
+  prefix           list of layer dicts (the non-periodic leading layers)
+  blocks           list over period positions, each leaf stacked (n_periods, ...)
+  final_norm       (d,)
+  lm_head          (d, V)  (absent when tied)
+
+Caches mirror the same structure (see ``init_cache_specs``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, ffn, mamba, rwkv6
+from repro.models.layers import rms_norm
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "Layout",
+    "layout_for",
+    "build_specs",
+    "init_cache_specs",
+    "forward",
+    "decode_step",
+    "lm_logits",
+    "lm_loss",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Static description of the trunk layer pattern."""
+
+    prefix: tuple[tuple[str, bool], ...]    # (mixer_kind, is_moe) per leading layer
+    period: tuple[tuple[str, bool], ...]    # pattern of one period
+    n_periods: int
+
+    @property
+    def p(self) -> int:
+        return len(self.period)
+
+
+def layout_for(cfg: ArchConfig) -> Layout:
+    kinds = cfg.layer_kinds()
+    moes = cfg.layer_is_moe()
+    layers = list(zip(kinds, moes))
+    n_prefix = cfg.moe_first_dense
+    body = layers[n_prefix:]
+    # smallest period that tiles the body
+    p = 1
+    while p <= len(body):
+        if len(body) % p == 0 and body == body[:p] * (len(body) // p):
+            break
+        p += 1
+    assert len(body) % p == 0, (cfg.name, p, len(body))
+    return Layout(
+        prefix=tuple(layers[:n_prefix]),
+        period=tuple(body[:p]),
+        n_periods=len(body) // p,
+    )
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def _layer_specs(cfg: ArchConfig, kind: str, is_moe: bool) -> dict:
+    d = cfg.d_model
+    dt = cfg.pdtype()
+    mixer = {
+        "attn": attention.specs,
+        "mamba": mamba.specs,
+        "rwkv6": rwkv6.specs,
+    }[kind](cfg)
+    if kind == "rwkv6":
+        ffn_specs = rwkv6.cmix_specs(cfg)
+    elif is_moe:
+        ffn_specs = ffn.moe_specs(cfg)
+    else:
+        ffn_specs = ffn.dense_specs(cfg)
+    return {
+        "mixer_norm": ParamSpec((d,), ("embed",), init="ones", dtype=dt),
+        "mixer": mixer,
+        "ffn_norm": ParamSpec((d,), ("embed",), init="ones", dtype=dt),
+        "ffn": ffn_specs,
+    }
+
+
+def _stack(spec_tree, n: int):
+    def add_axis(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, init=s.init, scale=s.scale, dtype=s.dtype)
+
+    return jax.tree_util.tree_map(add_axis, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def build_specs(cfg: ArchConfig) -> dict:
+    lay = layout_for(cfg)
+    d, v = cfg.d_model, cfg.vocab_size
+    dt = cfg.pdtype()
+    out: dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), dtype=dt, scale=0.02),
+        "prefix": [_layer_specs(cfg, k, m) for (k, m) in lay.prefix],
+        "blocks": [
+            _stack(_layer_specs(cfg, k, m), lay.n_periods) for (k, m) in lay.period
+        ],
+        "final_norm": ParamSpec((d,), ("embed",), init="ones", dtype=dt),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamSpec((d, v), ("embed", "vocab"), dtype=dt, scale=0.02)
+    return out
+
+
+def _layer_cache_specs(cfg: ArchConfig, kind: str, batch: int, seq_len: int) -> dict:
+    cache = {
+        "attn": attention.init_cache_specs,
+        "mamba": mamba.init_cache_specs,
+        "rwkv6": rwkv6.init_cache_specs,
+    }[kind](cfg, batch, seq_len)
+    if kind == "rwkv6":
+        return {"mixer": cache, "ffn": rwkv6.cmix_cache_specs(cfg, batch, seq_len)}
+    return {"mixer": cache, "ffn": None}
+
+
+def init_cache_specs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    lay = layout_for(cfg)
+    return {
+        "prefix": [
+            _layer_cache_specs(cfg, k, batch, seq_len) for (k, _) in lay.prefix
+        ],
+        "blocks": [
+            _stack(_layer_cache_specs(cfg, k, batch, seq_len), lay.n_periods)
+            for (k, _) in lay.period
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _apply_layer(
+    cfg: ArchConfig,
+    p,
+    x,
+    *,
+    kind: str,
+    is_moe: bool,
+    mode: str,
+    positions,
+    cache,
+    cache_len,
+    use_pallas: bool = False,
+    max_len: int | None = None,
+):
+    """Pre-norm residual layer. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["mixer_norm"], cfg.norm_eps)
+    mc = cache["mixer"] if cache is not None else None
+    if kind == "attn":
+        y, mc_new = attention.apply(
+            cfg, p["mixer"], h, positions=positions, mode=mode,
+            cache=mc, cache_len=cache_len, use_pallas=use_pallas,
+            max_len=max_len,
+        )
+    elif kind == "mamba":
+        y, mc_new = mamba.apply(cfg, p["mixer"], h, mode=mode, cache=mc, use_pallas=use_pallas)
+    else:
+        y, mc_new = rwkv6.apply(cfg, p["mixer"], h, mode=mode, cache=mc, use_pallas=use_pallas)
+    x = x + y
+
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    fc_new = None
+    if kind == "rwkv6":
+        fc = cache["ffn"] if cache is not None else None
+        y, fc_new = rwkv6.cmix_apply(cfg, p["ffn"], h, mode=mode, cache=fc)
+    elif is_moe:
+        y, aux = ffn.moe_apply(cfg, p["ffn"], h, train=(mode == "train"))
+    else:
+        y = ffn.dense_apply(cfg, p["ffn"], h)
+    x = x + y
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"mixer": mc_new, "ffn": fc_new}
+    return x, new_cache, aux
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    *,
+    tokens=None,
+    embeds=None,
+    mode: str = "train",
+    cache=None,
+    cache_len=None,
+    use_pallas: bool = False,
+    max_len: int | None = None,
+):
+    """Run the trunk.
+
+    train:   returns (logits, aux_loss)
+    prefill: returns (logits, cache, aux_loss)
+    decode:  tokens (B,1); returns (logits, cache)
+    """
+    lay = layout_for(cfg)
+    cd = cfg.cdtype()
+
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    else:
+        x = embeds.astype(cd)
+    b, s, _ = x.shape
+
+    if mode == "decode":
+        assert cache_len is not None
+        positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix_caches = []
+    for i, (kind, is_moe) in enumerate(lay.prefix):
+        c = cache["prefix"][i] if cache is not None else None
+        x, c_new, aux = _apply_layer(
+            cfg, params["prefix"][i], x, kind=kind, is_moe=is_moe, mode=mode,
+            positions=positions, cache=c, cache_len=cache_len, use_pallas=use_pallas,
+            max_len=max_len,
+        )
+        aux_total += aux
+        new_prefix_caches.append(c_new)
+
+    def period_body(carry, xs):
+        x, aux_total = carry
+        block_params, block_caches = xs
+        new_caches = []
+        for j, (kind, is_moe) in enumerate(lay.period):
+            c = block_caches[j] if block_caches is not None else None
+            x, c_new, aux = _apply_layer(
+                cfg, block_params[j], x, kind=kind, is_moe=is_moe, mode=mode,
+                positions=positions, cache=c, cache_len=cache_len,
+                use_pallas=use_pallas, max_len=max_len,
+            )
+            aux_total += aux
+            new_caches.append(c_new)
+        y = new_caches if mode in ("prefill", "decode") else None
+        return (x, aux_total), y
+
+    body = period_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(period_body)
+
+    block_caches = cache["blocks"] if cache is not None else None
+    (x, aux_total), new_block_caches = jax.lax.scan(
+        body, (x, aux_total), (params["blocks"], block_caches)
+    )
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    if mode == "train":
+        # hidden states, not logits: the loss materializes the (B, S, V)
+        # logits only chunk-by-chunk (see lm_loss) to bound live memory.
+        return x, aux_total
+    new_cache = {"prefix": new_prefix_caches, "blocks": new_block_caches}
+    if mode == "prefill":
+        # only the last position's logits are needed to start decoding
+        return lm_logits(params, cfg, x[:, -1:]), new_cache, aux_total
+    return lm_logits(params, cfg, x), new_cache
+
+
+def lm_logits(params, cfg: ArchConfig, hidden):
+    cd = cfg.cdtype()
+    head = params.get("lm_head")
+    if head is None:
+        return jnp.einsum("bsd,vd->bsv", hidden, params["embed"].astype(cd))
+    return jnp.einsum("bsd,dv->bsv", hidden, head.astype(cd))
+
+
+def lm_loss(params, cfg: ArchConfig, hidden, labels, mask=None, *, chunk: int = 512):
+    """Chunked next-token cross entropy: logits for each sequence chunk are
+    (re)computed inside a rematerialized scan so the full (B, S, V) tensor
+    never lives in memory — necessary for 128k-200k vocabularies."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones_like(labels, dtype=jnp.float32)
+    ms = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, l, m = xs
+        logits = lm_logits(params, cfg, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls, ms))
+    return total / jnp.maximum(count, 1.0)
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, cache_len, *, embeds=None, use_pallas: bool = False):
+    """One decode step: token (B, 1) int32, cache_len scalar int32."""
+    return forward(
+        params, cfg, tokens=token, embeds=embeds, mode="decode",
+        cache=cache, cache_len=cache_len, use_pallas=use_pallas,
+    )

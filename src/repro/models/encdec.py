@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv2 frontend is the allowed STUB: ``input_specs``
+feeds precomputed frame embeddings (B, encoder_seq, d) — sinusoidal
+positions already folded in. Everything downstream (encoder transformer,
+decoder with self + cross attention, tied logits) is real.
+
+Whisper uses LayerNorm (with bias) and GELU MLPs; attention is absolute-
+position (no RoPE). Decoder self-attention caches like any decoder;
+cross-attention K/V are computed once from the encoder output at prefill
+and kept in the cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, ffn
+from repro.models.layers import layer_norm
+from repro.models.params import ParamSpec
+
+__all__ = ["build_specs", "init_cache_specs", "forward", "decode_step", "encode"]
+
+
+def _ln_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    dt = cfg.pdtype()
+    return {
+        "w": ParamSpec((d,), ("embed",), init="ones", dtype=dt),
+        "b": ParamSpec((d,), ("embed",), init="zeros", dtype=dt),
+    }
+
+
+def _enc_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": _ln_specs(cfg),
+        "attn": attention.specs(cfg),
+        "ln2": _ln_specs(cfg),
+        "mlp": ffn.dense_specs(cfg),
+    }
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": _ln_specs(cfg),
+        "self_attn": attention.specs(cfg),
+        "ln_cross": _ln_specs(cfg),
+        "cross_attn": attention.specs(cfg),
+        "ln2": _ln_specs(cfg),
+        "mlp": ffn.dense_specs(cfg),
+    }
+
+
+def _stack(tree, n):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, init=s.init, scale=s.scale, dtype=s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def build_specs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    dt = cfg.pdtype()
+    return {
+        "encoder": {
+            "layers": _stack(_enc_layer_specs(cfg), cfg.num_encoder_layers),
+            "ln_post": _ln_specs(cfg),
+        },
+        "embed": ParamSpec((v, d), ("vocab", "embed"), dtype=dt, scale=0.02),
+        # large enough for the decode_32k dry-run shape (whisper itself caps
+        # at 448; the backbone is exercised at the assigned shapes)
+        "pos_embed": ParamSpec((32768, d), (None, "embed"), dtype=dt, scale=0.01),
+        "decoder": {
+            "layers": _stack(_dec_layer_specs(cfg), cfg.num_layers),
+            "ln_post": _ln_specs(cfg),
+        },
+    }
+
+
+def init_cache_specs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    l = cfg.num_layers
+    cd = cfg.cdtype()
+    self_kv = attention.init_cache_specs(cfg, batch, seq_len)
+    return {
+        "self": _stack(self_kv, l),
+        "cross": {
+            "k": ParamSpec((l, batch, cfg.encoder_seq, kv, hd), ("layers", "batch", None, "kv_heads", "head_dim"), init="zeros", dtype=cd),
+            "v": ParamSpec((l, batch, cfg.encoder_seq, kv, hd), ("layers", "batch", None, "kv_heads", "head_dim"), init="zeros", dtype=cd),
+        },
+    }
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+def encode(params, cfg: ArchConfig, encoder_embeds, *, use_pallas: bool = False):
+    """encoder_embeds: (B, S_enc, d) stubbed frontend output."""
+    cd = cfg.cdtype()
+    x = encoder_embeds.astype(cd)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg.norm_eps)
+        y, _ = attention.apply(
+            cfg, lp["attn"], h, positions=positions, mode="train",
+            causal=False, use_rope=False, use_pallas=use_pallas,
+        )
+        x = x + y
+        h = _ln(x, lp["ln2"], cfg.norm_eps)
+        x = x + ffn.dense_apply(cfg, lp["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return _ln(x, params["encoder"]["ln_post"], cfg.norm_eps)
+
+
+def _cross_kv(cfg, lp, enc_out):
+    cd = cfg.cdtype()
+    k = jnp.einsum("bsd,dke->bske", enc_out, lp["cross_attn"]["wk"].astype(cd))
+    v = jnp.einsum("bsd,dke->bske", enc_out, lp["cross_attn"]["wv"].astype(cd))
+    return k, v
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    *,
+    tokens,
+    encoder_embeds=None,
+    enc_out=None,
+    mode: str = "train",
+    cache=None,
+    cache_len=None,
+    use_pallas: bool = False,
+    max_len: int | None = None,
+):
+    """train: (hidden, aux). prefill: (last logits, cache, aux). decode:
+    (logits, cache) — decode uses cached cross-KV, not the encoder."""
+    cd = cfg.cdtype()
+    if mode != "decode" and enc_out is None:
+        enc_out = encode(params, cfg, encoder_embeds, use_pallas=use_pallas)
+
+    b, s = tokens.shape
+    if mode == "decode":
+        positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(cd)
+
+    if mode in ("train", "prefill"):
+        def body(x, lp):
+            h = _ln(x, lp["ln1"], cfg.norm_eps)
+            y, self_c = attention.apply(
+                cfg, lp["self_attn"], h, positions=positions, mode=mode,
+                causal=True, use_rope=False, use_pallas=use_pallas,
+                max_len=max_len,
+            )
+            x = x + y
+            h = _ln(x, lp["ln_cross"], cfg.norm_eps)
+            kv = _cross_kv(cfg, lp, enc_out)
+            y, _ = attention.apply(
+                cfg, lp["cross_attn"], h, positions=positions, mode="train",
+                kv_override=kv, use_rope=False, use_pallas=use_pallas,
+            )
+            x = x + y
+            h = _ln(x, lp["ln2"], cfg.norm_eps)
+            x = x + ffn.dense_apply(cfg, lp["mlp"], h)
+            ys = (self_c, kv) if mode == "prefill" else None
+            return x, ys
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+        x, ys = jax.lax.scan(body, x, params["decoder"]["layers"])
+        x = _ln(x, params["decoder"]["ln_post"], cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if mode == "train":
+            return x, aux
+        self_c, (ck, cv) = ys
+        logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embed"].astype(cd))
+        return logits, {"self": self_c, "cross": {"k": ck, "v": cv}}, aux
+
+    # -- decode -----------------------------------------------------------
+    assert cache is not None and cache_len is not None
+
+    def body(carry, xs):
+        x = carry
+        lp, self_c, cross_k, cross_v = xs
+        h = _ln(x, lp["ln1"], cfg.norm_eps)
+        y, self_c_new = attention.apply(
+            cfg, lp["self_attn"], h, positions=positions, mode="decode",
+            cache=self_c, cache_len=cache_len, use_rope=False,
+        )
+        x = x + y
+        h = _ln(x, lp["ln_cross"], cfg.norm_eps)
+        y, _ = attention.apply(
+            cfg, lp["cross_attn"], h, positions=positions, mode="decode",
+            cache=None, cache_len=cache_len, kv_override=(cross_k, cross_v),
+            use_rope=False,
+        )
+        x = x + y
+        h = _ln(x, lp["ln2"], cfg.norm_eps)
+        x = x + ffn.dense_apply(cfg, lp["mlp"], h)
+        return x, self_c_new
+
+    x = x  # (B, 1, d)
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"]["layers"], cache["self"], cache["cross"]["k"], cache["cross"]["v"])
+    )
+    x = _ln(x, params["decoder"]["ln_post"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cd))
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def decode_step(params, cfg, cache, token, cache_len, **kw):
+    return forward(
+        params, cfg, tokens=token, mode="decode", cache=cache, cache_len=cache_len, **kw
+    )

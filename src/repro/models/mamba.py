@@ -1,0 +1,129 @@
+"""Mamba (S6) mixer for the Jamba hybrid architecture [arXiv:2403.19887].
+
+Selective state-space layer: input-dependent (dt, B, C) with diagonal A.
+Train/prefill runs a time scan carrying h in f32 (the TPU adaptation of the
+paper's CUDA "hardware-aware" fused scan: the carried state lives in
+registers/VMEM instead of being materialized to HBM — in JAX terms we never
+materialize the (B, S, d_inner, N) state tensor, only the (B, S, d_inner)
+outputs). Decode is a single recurrence step on cached (conv, ssm) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+__all__ = ["specs", "apply", "init_cache_specs"]
+
+
+def specs(cfg: ArchConfig) -> dict:
+    d, di, n, dc = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    dtr = cfg.resolved_dt_rank
+    dt = cfg.pdtype()
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "mlp"), dtype=dt),
+        "conv_w": ParamSpec((dc, di), ("conv", "mlp"), dtype=dt, scale=0.5),
+        "conv_b": ParamSpec((di,), ("mlp",), init="zeros", dtype=dt),
+        "x_proj": ParamSpec((di, dtr + 2 * n), ("mlp", None), dtype=dt),
+        "dt_w": ParamSpec((dtr, di), (None, "mlp"), dtype=dt),
+        "dt_b": ParamSpec((di,), ("mlp",), init="dt_bias", dtype=dt),
+        "a_log": ParamSpec((di, n), ("mlp", "state"), init="s4d", dtype=jnp.float32),
+        "d_skip": ParamSpec((di,), ("mlp",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def init_cache_specs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    del seq_len  # state size is O(1) in context length
+    di, n, dc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    return {
+        "conv": ParamSpec((batch, dc - 1, di), ("batch", None, "mlp"), init="zeros", dtype=cfg.cdtype()),
+        "ssm": ParamSpec((batch, di, n), ("batch", "mlp", "state"), init="zeros", dtype=jnp.float32),
+    }
+
+
+def _split_xdbc(cfg, p, x_conv):
+    """x_conv (B,S,di) -> dt (B,S,di), B (B,S,N), C (B,S,N)."""
+    dtr, n = cfg.resolved_dt_rank, cfg.d_state
+    cd = cfg.cdtype()
+    xdbc = jnp.einsum("bsd,de->bse", x_conv, p["x_proj"].astype(cd))
+    dt_raw, b_ssm, c_ssm = jnp.split(xdbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_w"].astype(cd)).astype(jnp.float32)
+        + p["dt_b"].astype(jnp.float32)
+    )
+    return dt, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def apply(cfg: ArchConfig, p, x, *, mode: str = "train", cache=None, use_pallas: bool = False):
+    """x: (B, S, d). Returns (y, new_cache|None)."""
+    cd = cfg.cdtype()
+    di, dc = cfg.d_inner, cfg.d_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    x_in, z = jnp.split(xz, [di], axis=-1)
+
+    if mode in ("train", "prefill"):
+        b, s, _ = x_in.shape
+        pad = jnp.zeros((b, dc - 1, di), x_in.dtype)
+        x_pad = jnp.concatenate([pad, x_in], axis=1)          # (B, S+dc-1, di)
+        conv = sum(
+            x_pad[:, i : i + s] * p["conv_w"][i].astype(cd) for i in range(dc)
+        ) + p["conv_b"].astype(cd)
+        x_conv = jax.nn.silu(conv)
+        dt, b_ssm, c_ssm = _split_xdbc(cfg, p, x_conv)
+        a = -jnp.exp(p["a_log"])                               # (di, N)
+
+        def step(h, inp):
+            dt_t, b_t, c_t, x_t = inp                          # (B,di),(B,N),(B,N),(B,di)
+            da = jnp.exp(dt_t[:, :, None] * a[None])           # (B,di,N)
+            h = h * da + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y
+
+        if use_pallas:
+            from repro.kernels import ops as kops
+
+            ys_bsd, h_last = kops.mamba_scan(
+                dt, x_conv.astype(jnp.float32), b_ssm, c_ssm, a, use_pallas=True
+            )
+            y = ys_bsd + x_conv.astype(jnp.float32) * p["d_skip"]
+        else:
+            h0 = jnp.zeros((b, di, cfg.d_state), jnp.float32)
+            xs = (
+                dt.transpose(1, 0, 2),
+                b_ssm.transpose(1, 0, 2),
+                c_ssm.transpose(1, 0, 2),
+                x_conv.astype(jnp.float32).transpose(1, 0, 2),
+            )
+            h_last, ys = jax.lax.scan(step, h0, xs, unroll=min(cfg.mamba_unroll, s))
+            y = ys.transpose(1, 0, 2) + x_conv.astype(jnp.float32) * p["d_skip"]
+        y = (y.astype(cd) * jax.nn.silu(z))
+        out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(cd))
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {
+                "conv": x_in[:, -(dc - 1) :].astype(cd),
+                "ssm": h_last,
+            }
+        return out, new_cache
+
+    # -- decode ---------------------------------------------------------
+    assert cache is not None
+    x_t = x_in[:, 0]                                           # (B, di)
+    conv_state = cache["conv"]                                 # (B, dc-1, di)
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, dc, di)
+    conv = jnp.einsum("bcd,cd->bd", window.astype(cd), p["conv_w"].astype(cd)) + p["conv_b"].astype(cd)
+    x_conv = jax.nn.silu(conv)[:, None]                        # (B,1,di)
+    dt, b_ssm, c_ssm = _split_xdbc(cfg, p, x_conv)
+    a = -jnp.exp(p["a_log"])
+    dt_t, b_t, c_t = dt[:, 0], b_ssm[:, 0], c_ssm[:, 0]
+    h = cache["ssm"]
+    da = jnp.exp(dt_t[:, :, None] * a[None])
+    h = h * da + (dt_t * x_conv[:, 0].astype(jnp.float32))[:, :, None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + x_conv[:, 0].astype(jnp.float32) * p["d_skip"]
+    y = (y[:, None].astype(cd) * jax.nn.silu(z))
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(cd))
+    return out, {"conv": window[:, 1:].astype(conv_state.dtype), "ssm": h}

@@ -1,0 +1,167 @@
+"""Public model API: one object per architecture config.
+
+``Model`` wraps the family-specific modules behind a uniform interface the
+launcher, federated runtime, dry-run, and tests all consume:
+
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    loss   = m.loss(params, batch)                     # train
+    logits, cache = m.prefill(params, batch)           # serving
+    logits, cache = m.decode(params, cache, token, cache_len, extras)
+
+Batch layouts (all int32 tokens):
+  dense/moe/ssm/hybrid: {tokens(B,S), labels(B,S)}
+  vlm:   {tokens(B,S_text), labels(B,S_text), image_embeds(B,N_img,d)}
+  audio: {tokens(B,S), labels(B,S), encoder_embeds(B,S_enc,d)}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import decoder, encdec
+from repro.models.params import abstract_params, init_params, logical_axes, param_count
+
+__all__ = ["Model"]
+
+MOE_AUX_WEIGHT = 0.01
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, *, use_pallas: bool = False):
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+        if cfg.family == "audio":
+            self.specs = encdec.build_specs(cfg)
+        else:
+            self.specs = decoder.build_specs(cfg)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key):
+        return init_params(self.specs, key)
+
+    def abstract_params(self):
+        return abstract_params(self.specs)
+
+    def param_axes(self):
+        return logical_axes(self.specs)
+
+    def param_count(self) -> int:
+        return param_count(self.specs)
+
+    # -- caches ------------------------------------------------------------
+    def cache_specs(self, batch: int, seq_len: int):
+        if self.cfg.family == "audio":
+            return encdec.init_cache_specs(self.cfg, batch, seq_len)
+        return decoder.init_cache_specs(self.cfg, batch, seq_len)
+
+    def cache_axes(self, batch: int, seq_len: int):
+        return logical_axes(self.cache_specs(batch, seq_len))
+
+    def abstract_cache(self, batch: int, seq_len: int):
+        return abstract_params(self.cache_specs(batch, seq_len))
+
+    def init_cache(self, batch: int, seq_len: int):
+        return init_params(self.cache_specs(batch, seq_len), jax.random.key(0))
+
+    # -- embedding path for multimodal stubs --------------------------------
+    def _train_embeds(self, params, batch):
+        cfg = self.cfg
+        cd = cfg.cdtype()
+        if cfg.family == "vlm":
+            tok = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cd)
+            return jnp.concatenate([batch["image_embeds"].astype(cd), tok], axis=1)
+        return None
+
+    # -- train ---------------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            hidden, aux = encdec.forward(
+                params, cfg, tokens=batch["tokens"],
+                encoder_embeds=batch["encoder_embeds"], mode="train",
+                use_pallas=self.use_pallas,
+            )
+            return decoder.lm_loss(params, cfg, hidden, batch["labels"], chunk=cfg.loss_chunk)
+
+        embeds = self._train_embeds(params, batch)
+        hidden, aux = decoder.forward(
+            params, cfg,
+            tokens=None if embeds is not None else batch["tokens"],
+            embeds=embeds, mode="train", use_pallas=self.use_pallas,
+        )
+        if cfg.family == "vlm":
+            hidden = hidden[:, cfg.num_image_tokens :]
+        loss = decoder.lm_loss(params, cfg, hidden, batch["labels"], chunk=cfg.loss_chunk)
+        if cfg.num_experts:
+            loss = loss + MOE_AUX_WEIGHT * aux
+        return loss
+
+    # -- serving ---------------------------------------------------------------
+    def prefill(self, params, batch, *, max_len: int | None = None):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.forward(
+                params, cfg, tokens=batch["tokens"],
+                encoder_embeds=batch["encoder_embeds"], mode="prefill",
+                use_pallas=self.use_pallas, max_len=max_len,
+            )
+        embeds = self._train_embeds(params, batch)
+        return decoder.forward(
+            params, cfg,
+            tokens=None if embeds is not None else batch["tokens"],
+            embeds=embeds, mode="prefill", use_pallas=self.use_pallas,
+            max_len=max_len,
+        )
+
+    def decode(self, params, cache, token, cache_len, extras=None):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.decode_step(params, cfg, cache, token, cache_len)
+        return decoder.decode_step(
+            params, cfg, cache, token, cache_len, use_pallas=self.use_pallas
+        )
+
+    # -- dry-run input specs ---------------------------------------------------
+    def input_specs(self, shape: InputShape) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape
+        (weak-type-correct, shardable, no device allocation)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        cd = cfg.cdtype()
+
+        def tok(bb, ss):
+            return jax.ShapeDtypeStruct((bb, ss), i32)
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                st = s - cfg.num_image_tokens
+                out = {
+                    "tokens": tok(b, st),
+                    "image_embeds": jax.ShapeDtypeStruct((b, cfg.num_image_tokens, cfg.d_model), cd),
+                }
+                if shape.kind == "train":
+                    out["labels"] = tok(b, st)
+                return out
+            if cfg.family == "audio":
+                out = {
+                    "tokens": tok(b, s),
+                    "encoder_embeds": jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), cd),
+                }
+                if shape.kind == "train":
+                    out["labels"] = tok(b, s)
+                return out
+            out = {"tokens": tok(b, s)}
+            if shape.kind == "train":
+                out["labels"] = tok(b, s)
+            return out
+
+        # decode: one token against a seq_len cache
+        return {
+            "token": tok(b, 1),
+            "cache": self.abstract_cache(b, s),
+            "cache_len": jax.ShapeDtypeStruct((), i32),
+        }

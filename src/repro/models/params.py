@@ -1,0 +1,95 @@
+"""Parameter-spec system: shapes + logical sharding axes in one place.
+
+Every model module builds a nested dict of ``ParamSpec``s. From that single
+source of truth we derive:
+
+* ``init_params``   — materialized arrays (used by smoke tests / real runs)
+* ``abstract_params`` — ShapeDtypeStructs (used by the dry-run; no allocation)
+* ``logical_axes``  — pytree of logical-axis-name tuples, consumed by
+  ``repro.sharding.rules`` to produce NamedShardings.
+
+Logical axis vocabulary (resolved by the sharding rules):
+  "batch", "seq", "embed", "heads", "kv_heads", "head_dim", "mlp",
+  "experts", "moe_mlp", "vocab", "layers", "state", "conv", None
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "logical_axes", "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"           # normal | zeros | ones | decay
+    scale: float | None = None     # stddev override (default fan-in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_spec)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize a spec tree into arrays. Deterministic per-leaf keys are
+    derived by folding the leaf path hash into ``key``."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    paths = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)[0]
+
+    arrays = []
+    for (path, spec) in paths:
+        h = abs(hash(jax.tree_util.keystr(path))) % (2**31 - 1)
+        k = jax.random.fold_in(key, h)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, spec.dtype)
+        elif spec.init == "decay":
+            # small negative values -> exp(-exp(w)) decay close to 1
+            arr = jnp.full(spec.shape, -2.0, spec.dtype)
+        elif spec.init == "s4d":
+            # S4D-real: A_log[d, n] = log(1..N) per state column
+            n = spec.shape[-1]
+            arr = jnp.broadcast_to(
+                jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), spec.shape
+            ).astype(spec.dtype)
+        elif spec.init == "dt_bias":
+            # softplus^{-1}(dt) for dt ~ 0.001..0.1 -> around -4.6
+            arr = jnp.full(spec.shape, -4.6, spec.dtype)
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) == 1 else int(np.prod(spec.shape[:-1]))
+            scale = spec.scale if spec.scale is not None else 1.0 / max(np.sqrt(fan_in), 1.0)
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+        arrays.append(arr)
+    del leaves
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct twin of the spec tree — zero allocation."""
+    return _map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def logical_axes(specs):
+    """Pytree of logical-axis tuples matching the params pytree."""
+    return _map_specs(lambda s: s.axes, specs)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

@@ -1,0 +1,261 @@
+"""RWKV-6 "Finch" mixer: data-dependent decay linear attention
+[arXiv:2404.05892]. Attention-free: decode state is O(H * hd^2), constant
+in context length — which is why rwkv6 runs the 500k-token decode shape.
+
+Time-mix (the "attention"):       per head, state S in R^{hd x hd}
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with token-shift ddlerp inputs and data-dependent decay
+    w_t = exp(-exp(w0 + tanh(x_w @ A_w) @ B_w)).
+
+Channel-mix (the "FFN"):  k = relu(W_k x_k)^2, out = sigmoid(W_r x_r) * W_v k.
+
+The train-time recurrence is a `lax.scan` over time carrying S in f32; the
+Pallas kernel in ``repro.kernels.wkv6`` implements the chunked TPU version
+and is validated against ``wkv_scan`` below.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+__all__ = [
+    "specs",
+    "cmix_specs",
+    "apply",
+    "cmix_apply",
+    "init_cache_specs",
+    "cmix_cache_specs",
+    "wkv_scan",
+]
+
+_MIX_TARGETS = 5  # r, k, v, w, g
+
+
+def specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    lm, ld = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    dt = cfg.pdtype()
+    return {
+        "mu_x": ParamSpec((d,), ("embed",), init="zeros", dtype=dt),
+        "mu": ParamSpec((_MIX_TARGETS, d), (None, "embed"), init="zeros", dtype=dt),
+        "tm_w1": ParamSpec((d, _MIX_TARGETS * lm), ("embed", None), dtype=dt, scale=0.01),
+        "tm_w2": ParamSpec((_MIX_TARGETS, lm, d), (None, None, "embed"), dtype=dt, scale=0.01),
+        "wr": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), dtype=dt),
+        "wk": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), dtype=dt),
+        "wv": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), dtype=dt),
+        "wg": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), dtype=dt),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"), dtype=dt),
+        "w0": ParamSpec((h, hd), ("heads", "head_dim"), init="decay", dtype=jnp.float32),
+        "dw1": ParamSpec((d, ld), ("embed", None), dtype=dt, scale=0.01),
+        "dw2": ParamSpec((ld, d), (None, "embed"), dtype=dt, scale=0.01),
+        "u": ParamSpec((h, hd), ("heads", "head_dim"), dtype=jnp.float32, scale=0.1),
+        "ln_x": ParamSpec((d,), ("embed",), init="ones", dtype=jnp.float32),
+    }
+
+
+def cmix_specs(cfg: ArchConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype()
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), init="zeros", dtype=dt),
+        "mu_r": ParamSpec((d,), ("embed",), init="zeros", dtype=dt),
+        "ck": ParamSpec((d, ff), ("embed", "mlp"), dtype=dt),
+        "cv": ParamSpec((ff, d), ("mlp", "embed"), dtype=dt),
+        "cr": ParamSpec((d, d), ("embed", None), dtype=dt),
+    }
+
+
+def init_cache_specs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    del seq_len
+    d = cfg.d_model
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "shift": ParamSpec((batch, d), ("batch", "embed"), init="zeros", dtype=cfg.cdtype()),
+        "wkv": ParamSpec((batch, h, hd, hd), ("batch", "heads", None, None), init="zeros", dtype=jnp.float32),
+    }
+
+
+def cmix_cache_specs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    del seq_len
+    return {
+        "shift": ParamSpec((batch, cfg.d_model), ("batch", "embed"), init="zeros", dtype=cfg.cdtype()),
+    }
+
+
+def wkv_scan(r, k, v, w, u, s0=None, *, unroll: int = 1):
+    """Reference WKV-6 recurrence. r,k,v,w: (B, S, H, hd); u: (H, hd).
+    Returns (y (B,S,H,hd) f32, final state (B,H,hd,hd) f32).
+
+    ``unroll`` executes that many recurrence steps per scan iteration: the
+    carried (B,H,hd,hd) state then round-trips HBM once per ``unroll``
+    steps instead of once per token — the dominant HBM term of RWKV
+    training drops by ~unroll (see EXPERIMENTS.md §Perf). Bit-identical
+    math; the Pallas kernel removes the round-trip entirely on TPU."""
+    b, s, h, hd = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]              # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, state + u[..., :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    s_last, ys = jax.lax.scan(step, s0, xs, unroll=min(unroll, s))
+    return ys.transpose(1, 0, 2, 3), s_last
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, *, chunk: int = 64):
+    """Chunked matmul formulation of the WKV-6 recurrence (beyond-paper
+    optimization; exact same math as ``wkv_scan``).
+
+    Within a chunk of length C, with a_t = sum_{u<t} log w_u (chunk-local
+    prefix, a_0 = 0) and A_T = sum over the whole chunk:
+
+        y_t = (r_t * exp(a_t)) . S_chunk_start                 [cross term]
+            + sum_{s<t} ( sum_d r_t[d] k_s[d] exp(a_t[d]-a_{s+1}[d]) ) v_s
+            + (r_t * u * k_t) . v_t                            [bonus]
+        S'  = diag(exp(A_T)) S + sum_s (k_s * exp(A_T - a_{s+1})) v_s^T
+
+    Every exponent is a sum of log-decays over a *forward* interval, hence
+    <= 0: no overflow is possible (unlike the exp(a)/exp(-a) factorized
+    form). The scan now carries S once per CHUNK, so the dominant HBM term
+    of RWKV training drops ~chunk-fold, and the per-chunk work is
+    (C x C x hd) contractions instead of 4096 rank-1 updates.
+    """
+    b, s, h, hd = r.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+    if s0 is None:
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def to_chunks(t):
+        return t.astype(jnp.float32).reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc = to_chunks(r), to_chunks(k), to_chunks(v)
+    lw = jnp.log(jnp.maximum(to_chunks(w), 1e-30))           # (nc,B,C,H,hd), <= 0
+    uf = u.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)  # s < t
+
+    def body(state, inp):
+        rb, kb, vb, lwb = inp                                 # (B,C,H,hd)
+        a = jnp.cumsum(lwb, axis=1) - lwb                     # a_t = sum_{u<t}
+        a_total = a[:, -1] + lwb[:, -1]                       # (B,H,hd) = A_T
+        # cross: y_t += (r_t * exp(a_t)) . S
+        r_dec = rb * jnp.exp(a)
+        y = jnp.einsum("bthi,bhij->bthj", r_dec, state)
+        # intra: exponent a_t - a_{s+1} <= 0 for s < t
+        a_next = a + lwb                                      # a_{s+1}
+        expo = a[:, :, None] - a_next[:, None, :]             # (B,t,s,H,hd)
+        coef = jnp.exp(jnp.minimum(expo, 0.0)) * tri[None, :, :, None, None]
+        att = jnp.einsum("bthd,bshd,btshd->bths", rb, kb, coef)
+        y = y + jnp.einsum("bths,bshj->bthj", att, vb)
+        # bonus diagonal
+        y = y + jnp.einsum("bthd,bthd,bthj->bthj", rb * uf[None, None], kb, vb)
+        # state update
+        k_dec = kb * jnp.exp(a_total[:, None] - a_next)       # (B,C,H,hd), exp<=1
+        state = jnp.exp(a_total)[..., None] * state + jnp.einsum(
+            "bshi,bshj->bhij", k_dec, vb
+        )
+        return state, y
+
+    s_last, ys = jax.lax.scan(body, s0, (rc, kc, vc, lw))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return y, s_last
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    dx = x_prev - x
+    inner = x + dx * p["mu_x"].astype(x.dtype)
+    lora = jnp.einsum("bsd,de->bse", jnp.tanh(inner), p["tm_w1"].astype(x.dtype))
+    lora = lora.reshape(*x.shape[:-1], _MIX_TARGETS, -1)
+    lora = jnp.einsum("bste,ted->bstd", lora, p["tm_w2"].astype(x.dtype))
+    mix = p["mu"].astype(x.dtype) + lora                        # (B,S,5,d)
+    return x[..., None, :] + dx[..., None, :] * mix             # (B,S,5,d)
+
+
+def _decay(cfg, p, xw):
+    """xw: (B,S,d) -> per-channel decay in (0,1): (B,S,H,hd) f32."""
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    lo = jnp.einsum("bsd,dl->bsl", jnp.tanh(xw), p["dw1"].astype(xw.dtype))
+    lo = jnp.einsum("bsl,ld->bsd", lo, p["dw2"].astype(xw.dtype))
+    raw = p["w0"].reshape(-1) + lo.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(raw)).reshape(*xw.shape[:-1], h, hd)
+
+
+def apply(cfg: ArchConfig, p, x, *, mode: str = "train", cache=None, use_pallas: bool = False):
+    """Time-mix. x: (B, S, d) normed input. Returns (y, new_cache|None)."""
+    from repro.kernels import ops as kops
+
+    cd = cfg.cdtype()
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    if mode in ("train", "prefill"):
+        x_prev = jnp.concatenate([jnp.zeros((b, 1, d), x.dtype), x[:, :-1]], axis=1)
+        s0 = None
+    else:
+        assert cache is not None
+        x_prev = cache["shift"][:, None].astype(x.dtype)
+        s0 = cache["wkv"]
+
+    mixed = _ddlerp(p, x, x_prev)                               # (B,S,5,d)
+    xr, xk, xv, xw, xg = (mixed[:, :, i] for i in range(_MIX_TARGETS))
+    r = jnp.einsum("bsd,dhe->bshe", xr, p["wr"].astype(cd))
+    k = jnp.einsum("bsd,dhe->bshe", xk, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhe->bshe", xv, p["wv"].astype(cd))
+    g = jnp.einsum("bsd,dhe->bshe", xg, p["wg"].astype(cd))
+    w = _decay(cfg, p, xw)
+
+    backend = cfg.wkv_backend if mode in ("train", "prefill") else "scan"
+    y, s_last = kops.wkv6(r, k, v, w, p["u"], s0=s0, use_pallas=use_pallas,
+                          unroll=cfg.wkv_unroll, backend=backend,
+                          chunk=cfg.wkv_chunk)
+
+    # per-head group norm then gate
+    y = y.reshape(b, s, h, hd)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(b, s, d) * p["ln_x"]
+    y = y.astype(cd) * jax.nn.silu(g.reshape(b, s, d))
+    out = jnp.einsum("bshe,hed->bsd", y.reshape(b, s, h, hd), p["wo"].astype(cd))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"shift": x[:, -1].astype(cd), "wkv": s_last}
+    return out, new_cache
+
+
+def cmix_apply(cfg: ArchConfig, p, x, *, mode: str = "train", cache=None):
+    """Channel-mix. x: (B, S, d) normed input."""
+    cd = cfg.cdtype()
+    b, s, d = x.shape
+    if mode in ("train", "prefill"):
+        x_prev = jnp.concatenate([jnp.zeros((b, 1, d), x.dtype), x[:, :-1]], axis=1)
+    else:
+        assert cache is not None
+        x_prev = cache["shift"][:, None].astype(x.dtype)
+    xk = x + (x_prev - x) * p["mu_k"].astype(cd)
+    xr = x + (x_prev - x) * p["mu_r"].astype(cd)
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(cd))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cv"].astype(cd))
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"].astype(cd))) * kv
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"shift": x[:, -1].astype(cd)}
+    return out, new_cache

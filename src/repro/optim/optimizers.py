@@ -1,0 +1,102 @@
+"""Optimizers in pure JAX (pytree-functional, optax-free).
+
+State pytrees mirror the param tree, so whatever sharding the params get,
+the optimizer state inherits — with FSDP ('embed' -> data) rules this is
+ZeRO-style sharded optimizer state for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw", "get_optimizer", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable          # params -> state
+    update: Callable        # (grads, state, params) -> (updates, state)
+
+    def apply(self, grads, state, params):
+        updates, state = self.update(grads, state, params)
+        new_params = jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        return new_params, state
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def sgd(lr: float) -> Optimizer:
+    return Optimizer(
+        init=lambda params: (),
+        update=lambda g, s, p: (jax.tree_util.tree_map(lambda x: -lr * x, g), s),
+    )
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(g, m, p):
+        m = jax.tree_util.tree_map(lambda mi, gi: beta * mi + gi.astype(jnp.float32), m, g)
+        return jax.tree_util.tree_map(lambda mi: -lr * mi, m), m
+
+    return Optimizer(init=init, update=update)
+
+
+def _adam_core(lr, b1, b2, eps, wd):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(g, state, params):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda mi, gi: b1 * mi + (1 - b1) * gi.astype(jnp.float32), state["m"], g
+        )
+        v = jax.tree_util.tree_map(
+            lambda vi, gi: b2 * vi + (1 - b2) * jnp.square(gi.astype(jnp.float32)),
+            state["v"], g,
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(mi, vi, pi):
+            step = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if wd:
+                step = step + wd * pi.astype(jnp.float32)
+            return (-lr * step).astype(pi.dtype)
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, wd: float = 0.01) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, wd)
+
+
+def get_optimizer(name: str, lr: float) -> Optimizer:
+    return {
+        "sgd": lambda: sgd(lr),
+        "momentum": lambda: momentum(lr),
+        "adam": lambda: adam(lr),
+        "adamw": lambda: adamw(lr),
+    }[name]()

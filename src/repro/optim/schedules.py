@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "warmup_cosine", "warmup_linear_decay"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(lr: float, *, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    """Linear warmup to ``lr`` then cosine decay to ``final_frac * lr``."""
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return f
+
+
+def warmup_linear_decay(lr: float, *, warmup_steps: int, total_steps: int):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, lr * (1.0 - t))
+
+    return f

@@ -1,0 +1,118 @@
+"""Roofline model for TPU v5e-class hardware from dry-run artifacts.
+
+Three terms, all in seconds (per training/serving step, per chip):
+
+    compute    = HLO_FLOPs / PEAK_FLOPS
+    memory     = HLO_bytes / HBM_BW
+    collective = sum_c (bytes_c * factor_c) / ICI_BW
+
+``cost_analysis`` on the compiled (already SPMD-partitioned) module reports
+per-device FLOPs/bytes. Collective bytes come from parsing the compiled HLO
+(see ``hlo_collectives``): cost_analysis does not count them.
+
+Bandwidth factors per collective (ring algorithms, n >> 1):
+  all-reduce ~ 2x payload, all-gather / reduce-scatter / all-to-all ~ 1x,
+  collective-permute ~ 1x.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = [
+    "HW",
+    "Hardware",
+    "hlo_collectives",
+    "roofline_terms",
+    "model_flops_per_step",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link (~per chip eff.)
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def hlo_collectives(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the (partitioned) HLO.
+    '-done' ops are skipped so async pairs are not double counted."""
+    out: dict[str, dict] = {k: {"bytes": 0, "count": 0} for k in _COLL_FACTOR}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group("op")
+        out[op]["bytes"] += _shape_bytes(m.group("result"))
+        out[op]["count"] += 1
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, collectives: dict, hw: Hardware = HW) -> dict:
+    coll_bytes_eff = sum(
+        v["bytes"] * _COLL_FACTOR[k] for k, v in collectives.items()
+    )
+    coll_bytes_raw = sum(v["bytes"] for v in collectives.values())
+    terms = {
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": bytes_accessed / hw.hbm_bw,
+        "collective_s": coll_bytes_eff / hw.ici_bw,
+        "collective_bytes": coll_bytes_raw,
+    }
+    dominant = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["dominant"] = dominant.replace("_s", "")
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["compute_fraction_of_bound"] = (
+        terms["compute_s"] / bound if bound > 0 else 0.0
+    )
+    return terms
+
+
+def model_flops_per_step(cfg, shape, n_chips: int) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE) for train; 2 N D for
+    a single forward token batch in decode; per chip."""
+    total, active = cfg.param_counts()
+    if shape.kind == "train":
+        mult, tokens = 6.0, shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        mult, tokens = 2.0, shape.global_batch * shape.seq_len
+    else:
+        mult, tokens = 2.0, shape.global_batch  # one token per sequence
+    return mult * active * tokens / n_chips

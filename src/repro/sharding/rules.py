@@ -1,0 +1,125 @@
+"""Logical-axis -> mesh-axis resolution (MaxText-style, with divisibility
+fallback).
+
+Each param/cache/input leaf carries a tuple of logical axis names (from its
+``ParamSpec``). A *rule set* maps every logical name to an ordered list of
+candidate mesh-axis assignments; the resolver picks, per leaf dimension, the
+first candidate whose mesh-axis product divides the dimension size and whose
+axes are not already used by another dimension of the same leaf. Anything
+unresolvable is replicated — e.g. whisper's 12 heads on a 16-way model axis
+fall back to replication automatically instead of failing to lower.
+
+Baseline TRAIN rules = FSDP("embed"->data) + TP("heads"/"mlp"/"vocab"->model)
++ DP("batch"->pod,data). Params/optimizer state are therefore fully sharded
+(ZeRO-3-like) and grads reduce over the data axes.
+
+SERVE rules keep weights model-sharded only (weight-stationary decode: no
+per-step weight all-gathers) and shard long KV caches over the data axis
+(sequence-parallel flash-decode; XLA inserts the cross-shard softmax
+reductions).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["TRAIN_RULES", "SERVE_RULES", "resolve_spec", "tree_shardings", "input_shardings"]
+
+# logical axis -> ordered candidates; each candidate is a tuple of mesh axes
+TRAIN_RULES: dict[str, list[tuple[str, ...]]] = {
+    "batch": [("pod", "data"), ("data",), ("pod",)],
+    "seq": [],
+    "cache_seq": [("data",)],
+    "embed": [("data",)],            # FSDP / ZeRO param+optimizer sharding
+    "vocab": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [],
+    "mlp": [("model",)],
+    "moe_mlp": [("model",)],
+    "experts": [],                   # baseline: experts replicated, TP inside
+    "state": [],
+    "conv": [],
+    "layers": [],
+}
+
+SERVE_RULES: dict[str, list[tuple[str, ...]]] = {
+    **TRAIN_RULES,
+    "embed": [],                     # weight-stationary decode
+}
+
+# beyond-paper variant used in §Perf hillclimbing: expert-parallel MoE
+EXPERT_PARALLEL_RULES: dict[str, list[tuple[str, ...]]] = {
+    **TRAIN_RULES,
+    "experts": [("model",)],
+    "moe_mlp": [],
+}
+
+
+def resolve_spec(
+    axes: Sequence[str | None],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict[str, list[tuple[str, ...]]],
+) -> P:
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        assignment = None
+        if name is not None:
+            for cand in rules.get(name, []):
+                if any(a not in mesh.shape for a in cand):
+                    continue
+                size = 1
+                for a in cand:
+                    size *= mesh.shape[a]
+                if dim % size == 0 and not (set(cand) & used):
+                    assignment = cand
+                    used.update(cand)
+                    break
+        if assignment is None:
+            out.append(None)
+        elif len(assignment) == 1:
+            out.append(assignment[0])
+        else:
+            out.append(assignment)
+    return P(*out)
+
+
+def tree_shardings(axes_tree, abstract_tree, mesh: Mesh, rules) -> object:
+    """Map (logical-axes tree, ShapeDtypeStruct tree) -> NamedSharding tree."""
+
+    def one(axes, aval):
+        if axes is None or aval is None:   # empty subtree (e.g. cache["ffn"])
+            return None
+        return NamedSharding(mesh, resolve_spec(axes, aval.shape, mesh, rules))
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, abstract_tree, is_leaf=lambda x: isinstance(x, tuple) or x is None
+    )
+
+
+# logical axes for model *inputs* by name
+_INPUT_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "image_embeds": ("batch", "seq", None),
+    "encoder_embeds": ("batch", "seq", None),
+    "token": ("batch", None),
+    "cache_len": (),
+}
+
+
+def input_shardings(input_specs: dict, mesh: Mesh, rules, cache_axes=None) -> dict:
+    out = {}
+    for name, spec in input_specs.items():
+        if name == "cache":
+            assert cache_axes is not None
+            out[name] = tree_shardings(cache_axes, spec, mesh, rules)
+        else:
+            axes = _INPUT_AXES[name]
+            out[name] = NamedSharding(mesh, resolve_spec(axes, spec.shape, mesh, rules))
+    return out

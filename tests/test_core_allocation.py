@@ -1,0 +1,188 @@
+"""Unit + property tests for the paper's core: the task-allocation solvers.
+
+Property tests (hypothesis) certify the system invariants on random
+heterogeneous fleets:
+  * every solver output is feasible (sum, bounds, deadline, integrality);
+  * the KKT water-filling point satisfies Theorem 1 stationarity;
+  * optimized max staleness <= ETA max staleness (the paper's headline);
+  * the synchronous baseline is uniform in tau.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AllocationProblem,
+    TimeModel,
+    avg_staleness,
+    indoor_80211_profile,
+    max_staleness,
+    mnist_dnn_cost,
+    pod_slice_profile,
+    solve_eta,
+    solve_kkt_sai,
+    solve_pgd_jax,
+    solve_slsqp,
+    solve_synchronous,
+)
+from repro.core.solver_kkt import (
+    solve_relaxed,
+    stationarity_residual,
+    variable_upper_bounds,
+)
+from repro.core.staleness import pair_matrix
+
+
+def make_problem(k=10, T=15.0, d=6000, seed=0, profile="edge"):
+    cost = mnist_dnn_cost()
+    profs = (
+        indoor_80211_profile(k, seed=seed)
+        if profile == "edge"
+        else pod_slice_profile(k, seed=seed)
+    )
+    tm = TimeModel.build(
+        profs,
+        model_complexity_flops=cost.flops_per_sample,
+        model_size_bits=cost.model_bits,
+    )
+    return AllocationProblem(
+        time_model=tm,
+        T=T,
+        total_samples=d,
+        d_lower=max(1, d // (4 * k)),
+        d_upper=min(d, 3 * d // k),
+    )
+
+
+# ---------------------------------------------------------------------------
+# exact paper constants
+# ---------------------------------------------------------------------------
+
+def test_paper_constants_exact():
+    cost = mnist_dnn_cost()
+    assert cost.model_bits == 8_974_080          # Sec. V-A
+    assert cost.flops_per_sample == 1_123_736    # Sec. V-A
+
+
+def test_pair_matrix_matches_paper_eq10():
+    c = pair_matrix(4)
+    want = np.array([[0, 1], [0, 2], [0, 3], [1, 2], [1, 3], [2, 3]])
+    np.testing.assert_array_equal(c, want)
+    assert c.shape[0] == 6  # N = C(4,2)
+
+
+# ---------------------------------------------------------------------------
+# solver correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("solver", [solve_kkt_sai, solve_eta, solve_synchronous])
+def test_solver_feasible(solver):
+    prob = make_problem()
+    alloc = solver(prob)
+    alloc.validate(prob)
+
+
+def test_kkt_matches_slsqp_relaxed():
+    prob = make_problem(k=8, seed=2)
+    a = solve_kkt_sai(prob)
+    b = solve_slsqp(prob)
+    np.testing.assert_allclose(a.relaxed_d, b.relaxed_d, rtol=1e-4, atol=1e-3)
+    assert a.summary(prob)["max_staleness"] == b.summary(prob)["max_staleness"]
+
+
+def test_pgd_close_to_kkt():
+    prob = make_problem(k=8, seed=4)
+    a = solve_kkt_sai(prob)
+    c = solve_pgd_jax(prob)
+    assert c.summary(prob)["max_staleness"] <= a.summary(prob)["max_staleness"] + 1
+
+
+def test_theorem1_stationarity():
+    prob = make_problem(k=12, seed=1)
+    tau, d, _, _ = solve_relaxed(prob)
+    assert stationarity_residual(prob, d) < 1e-8
+
+
+def test_relaxed_full_time_utilization():
+    """Constraint (7b): at the relaxed optimum every learner works t_k = T."""
+    prob = make_problem(k=9, seed=5)
+    tau, d, _, _ = solve_relaxed(prob)
+    t = prob.time_model.cycle_time(tau, d)
+    np.testing.assert_allclose(t, prob.T, rtol=1e-6)
+
+
+def test_variable_upper_bounds_hold():
+    prob = make_problem(k=7, seed=6)
+    tau_ub, d_ub = variable_upper_bounds(prob)
+    alloc = solve_kkt_sai(prob)
+    assert np.all(alloc.tau <= tau_ub + 1e-9)
+    assert np.all(alloc.d <= np.ceil(d_ub) + 1e-9)
+
+
+def test_sync_uniform_tau():
+    prob = make_problem(k=10, seed=3)
+    alloc = solve_synchronous(prob)
+    assert np.all(alloc.tau == alloc.tau[0])
+    assert max_staleness(alloc.tau) == 0
+
+
+def test_infeasible_rejected():
+    prob = make_problem(k=6, T=15.0)
+    with pytest.raises(ValueError):
+        AllocationProblem(
+            time_model=prob.time_model, T=15.0, total_samples=100,
+            d_lower=50, d_upper=60,
+        )
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+fleet = st.integers(min_value=3, max_value=16)
+cycle_T = st.sampled_from([5.0, 7.5, 15.0, 30.0])
+seeds = st.integers(min_value=0, max_value=10_000)
+profile = st.sampled_from(["edge", "pod"])
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=fleet, T=cycle_T, seed=seeds, profile=profile)
+def test_property_kkt_feasible_and_beats_eta(k, T, seed, profile):
+    try:
+        prob = make_problem(k=k, T=T, seed=seed, profile=profile)
+        alloc = solve_kkt_sai(prob)
+        eta = solve_eta(prob)
+    except ValueError:
+        return  # infeasible instance: nothing to compare
+    alloc.validate(prob)
+    eta.validate(prob)
+    # headline claim: optimized staleness never exceeds equal-task staleness
+    assert max_staleness(alloc.tau) <= max_staleness(eta.tau)
+    assert avg_staleness(alloc.tau) <= avg_staleness(eta.tau) + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=fleet, T=cycle_T, seed=seeds)
+def test_property_relaxed_is_stationary(k, T, seed):
+    try:
+        prob = make_problem(k=k, T=T, seed=seed)
+        _, d, _, _ = solve_relaxed(prob)
+    except ValueError:
+        return
+    assert stationarity_residual(prob, d) < 1e-6
+    assert abs(d.sum() - prob.total_samples) < 1e-3 * prob.total_samples
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=fleet, T=cycle_T, seed=seeds)
+def test_property_sync_never_more_updates_than_async(k, T, seed):
+    """Async dominates sync in total update count (the mechanism behind the
+    paper's accuracy gains)."""
+    try:
+        prob = make_problem(k=k, T=T, seed=seed)
+        a = solve_kkt_sai(prob)
+        s = solve_synchronous(prob)
+    except ValueError:
+        return
+    assert int((a.tau * a.d).sum()) >= int((s.tau * s.d).sum())

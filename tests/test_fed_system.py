@@ -1,0 +1,119 @@
+"""Integration tests for the asynchronous MEL system (orchestrator +
+data pipeline + aggregation + checkpointing)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import aggregate, fedavg_weights, staleness_weights
+from repro.data.pipeline import FederatedPartitioner, synthetic_mnist
+from repro.fed.orchestrator import local_train
+from repro.fed.simulation import build_problem, run_experiment, staleness_sweep
+from repro.models import mlp
+
+
+def test_synthetic_mnist_learnable():
+    train, test = synthetic_mnist(4000, n_test=1000, seed=0)
+    params = mlp.init(jax.random.key(0))
+    batch = {"x": jnp.asarray(train.x[:1000]), "y": jnp.asarray(train.y[:1000])}
+    for _ in range(25):
+        g = jax.grad(mlp.loss)(params, batch)
+        params = jax.tree_util.tree_map(lambda p, gi: p - 0.1 * gi, params, g)
+    acc = float(mlp.accuracy(params, jnp.asarray(test.x), jnp.asarray(test.y)))
+    assert acc > 0.6
+
+
+def test_partitioner_sizes_and_disjoint():
+    train, _ = synthetic_mnist(2000, n_test=10, seed=1)
+    part = FederatedPartitioner(train, seed=0)
+    d = np.array([100, 300, 50])
+    shards = part.draw(d)
+    assert [s.size for s in shards] == [100, 300, 50]
+
+
+def test_local_train_masked_tau():
+    """Learners with tau=0 must return the global params untouched; higher
+    tau must move farther."""
+    train, _ = synthetic_mnist(600, n_test=10, seed=2)
+    params = mlp.init(jax.random.key(1))
+    k, dmax = 3, 200
+    x = jnp.asarray(train.x[: k * dmax].reshape(k, dmax, -1))
+    y = jnp.asarray(train.y[: k * dmax].reshape(k, dmax))
+    m = jnp.ones((k, dmax), jnp.float32)
+    tau = jnp.asarray([0, 1, 8])
+    out = local_train(params, x, y, m, tau, jnp.float32(0.05), max_tau=8, loss_fn=mlp.loss)
+
+    def dist(i):
+        return float(
+            sum(
+                jnp.sum((jax.tree_util.tree_leaves(out)[j][i] - l) ** 2)
+                for j, l in enumerate(jax.tree_util.tree_leaves(params))
+            )
+        )
+
+    assert dist(0) == 0.0
+    assert 0.0 < dist(1) < dist(2)
+
+
+def test_staleness_weights_reduce_to_fedavg():
+    d = np.array([100, 200, 300])
+    tau = np.array([4, 4, 4])
+    np.testing.assert_allclose(staleness_weights(tau, d), fedavg_weights(d))
+    tau2 = np.array([1, 4, 4])
+    w = staleness_weights(tau2, d)
+    assert w[0] < fedavg_weights(d)[0]  # stale learner downweighted
+
+
+def test_aggregate_weighted_mean():
+    models = {"w": jnp.arange(6, dtype=jnp.float32).reshape(3, 2)}
+    w = jnp.asarray([0.5, 0.25, 0.25])
+    out = aggregate(models, w)
+    np.testing.assert_allclose(out["w"], np.array([1.5, 2.5]))
+
+
+@pytest.mark.slow
+def test_end_to_end_accuracy_improves():
+    res = run_experiment(k=6, T=15.0, cycles=4, scheme="kkt_sai", total_samples=3000, seed=1)
+    accs = [h["accuracy"] for h in res["history"]]
+    assert accs[-1] > accs[0]
+    assert accs[-1] > 0.7
+    assert res["allocation"]["max_staleness"] <= 2
+
+
+@pytest.mark.slow
+def test_optimized_staleness_beats_eta_system_level():
+    rows = staleness_sweep([6, 10], 7.5, schemes=("kkt_sai", "eta"), seed=0)
+    by = {(r["K"], r["scheme"]): r for r in rows if "error" not in r}
+    for k in (6, 10):
+        assert by[(k, "kkt_sai")]["max_staleness"] <= by[(k, "eta")]["max_staleness"]
+
+
+def test_wall_clock_accounting():
+    prob = build_problem(5, 7.5, total_samples=2000)
+    from repro.core import solve_kkt_sai
+
+    alloc = solve_kkt_sai(prob)
+    t = prob.time_model.cycle_time(alloc.tau, alloc.d)
+    assert np.all(t <= 7.5 * (1 + 1e-9))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = mlp.init(jax.random.key(3))
+    path = tmp_path / "model.npz"
+    ckpt.save(path, params, step=7)
+    restored = ckpt.restore(path, params)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.load_metadata(path.with_suffix(".json"))["step"] == 7
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    params = mlp.init(jax.random.key(3))
+    path = tmp_path / "model.npz"
+    ckpt.save(path, params)
+    bad = mlp.init(jax.random.key(3), layers=[784, 10, 10])
+    with pytest.raises((ValueError, KeyError)):
+        ckpt.restore(path, bad)

@@ -1,0 +1,136 @@
+"""Sharding-rule unit tests + a dry-run smoke in a subprocess (so the main
+pytest process never sees a forced device count)."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.roofline.analysis import hlo_collectives, roofline_terms
+from repro.sharding import rules as R
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by resolve_spec."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_batch_spans_pod_and_data():
+    spec = R.resolve_spec(("batch", "seq"), (256, 4096), MULTI, R.TRAIN_RULES)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_divisibility_fallback_drops_axis():
+    # whisper: 12 heads on a 16-way model axis -> replicate
+    spec = R.resolve_spec(("embed", "heads", "head_dim"), (768, 12, 64), POD, R.TRAIN_RULES)
+    assert spec == P("data", None, None)
+
+
+def test_batch_one_falls_back_to_replicated_and_seq_shards():
+    spec = R.resolve_spec(("batch", "cache_seq", "kv_heads", "head_dim"),
+                          (1, 524288, 8, 128), POD, R.SERVE_RULES)
+    assert spec == P(None, "data", None, None)
+
+
+def test_no_mesh_axis_reused_within_leaf():
+    spec = R.resolve_spec(("mlp", "mlp"), (1024, 1024), POD, R.TRAIN_RULES)
+    assert spec == P("model", None)
+
+
+def test_serve_rules_weight_stationary():
+    spec = R.resolve_spec(("embed", "heads", "head_dim"), (4096, 32, 128), POD, R.SERVE_RULES)
+    assert spec == P(None, "model", None)
+
+
+def test_expert_parallel_rules():
+    spec = R.resolve_spec(("experts", "embed", "moe_mlp"), (64, 2048, 1408), POD,
+                          R.EXPERT_PARALLEL_RULES)
+    assert spec == P("model", "data", None)
+
+
+def test_param_shardings_cover_whole_tree():
+    cfg = get_config("llama3-8b")
+    m = Model(cfg)
+    sh = R.tree_shardings(m.param_axes(), m.abstract_params(), POD_REAL(), R.TRAIN_RULES)
+    leaves = jax.tree_util.tree_leaves(sh)
+    assert leaves and all(l is not None for l in leaves)
+
+
+def POD_REAL():
+    # a real (tiny) mesh with the production axis names for NamedSharding
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %ar = f32[1024,128]{1,0} all-reduce(f32[1024,128]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[64,256]{1,0} all-gather(bf16[8,256]{1,0} %y), dimensions={0}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(f32[16,16]{1,0} %a, f32[16,16]{1,0} %b)
+  %cp-start = bf16[32]{0} collective-permute-start(bf16[32]{0} %z)
+  %cp-done = bf16[32]{0} collective-permute-done(bf16[32]{0} %cp-start)
+"""
+
+
+def test_hlo_collective_parser():
+    c = hlo_collectives(HLO_SAMPLE)
+    assert c["all-reduce"]["bytes"] == 1024 * 128 * 4
+    assert c["all-gather"]["bytes"] == 64 * 256 * 2
+    assert c["all-to-all"]["bytes"] == 2 * 16 * 16 * 4
+    assert c["collective-permute"]["count"] == 1          # -done not double counted
+    assert c["collective-permute"]["bytes"] == 32 * 2
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 819e9 * 0.5, {"all-reduce": {"bytes": 0, "count": 0}})
+    assert t["dominant"] == "compute"
+    t2 = roofline_terms(1.0, 1.0, {"all-reduce": {"bytes": int(50e9), "count": 1}})
+    assert t2["dominant"] == "collective"
+
+
+# ---------------------------------------------------------------------------
+# dry-run smoke (subprocess with 8 fake devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("llama3-8b", "train_4k"),
+        ("deepseek-moe-16b", "decode_32k"),
+        ("rwkv6-7b", "long_500k"),
+        ("jamba-v0.1-52b", "train_4k"),
+    ],
+)
+def test_dryrun_subprocess(arch, shape, tmp_path):
+    mesh = "multitest"
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.loads((tmp_path / f"{arch}__{shape}__{mesh}.json").read_text())
+    assert rec["flops_per_device"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
