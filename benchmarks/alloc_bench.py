@@ -1,0 +1,146 @@
+"""Allocation-engine benchmark: problems/sec for the per-problem Python
+KKT+SAI solver vs the batched engine, plus eager-vs-fused orchestrator
+cycle wall-time. Emits machine-readable ``BENCH_alloc.json`` (the perf
+trajectory seed for the fleet-scale scheduling path).
+
+  PYTHONPATH=src python -m benchmarks.run --only alloc
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import (
+    AllocationProblem,
+    BatchedProblems,
+    TimeModel,
+    indoor_80211_profile,
+    mnist_dnn_cost,
+    solve_kkt_batched,
+    solve_kkt_sai,
+)
+
+OUT_PATH = pathlib.Path("BENCH_alloc.json")
+
+
+def _make_problem(k: int, seed: int, total: int = 6000) -> AllocationProblem:
+    cost = mnist_dnn_cost()
+    tm = TimeModel.build(
+        indoor_80211_profile(k, seed=seed),
+        model_complexity_flops=cost.flops_per_sample,
+        model_size_bits=cost.model_bits,
+    )
+    return AllocationProblem(
+        time_model=tm, T=15.0, total_samples=total,
+        d_lower=max(1, total // (4 * k)), d_upper=min(total, 3 * total // k),
+    )
+
+
+def bench_alloc(b: int, k: int, *, loop_sample: int) -> dict:
+    probs = [_make_problem(k, seed) for seed in range(b)]
+    bp = BatchedProblems.from_problems(probs)
+
+    n_loop = min(loop_sample, b)
+    t0 = time.time()
+    for p in probs[:n_loop]:
+        solve_kkt_sai(p)
+    loop_s = (time.time() - t0) / n_loop * b
+
+    solve_kkt_batched(bp)            # compile + warmup
+    t0 = time.time()
+    ba = solve_kkt_batched(bp)
+    batched_s = time.time() - t0
+    assert bool(ba.feasible.all())
+
+    return {
+        "B": b,
+        "K": k,
+        "python_loop_s": round(loop_s, 4),
+        "python_loop_sampled": n_loop,
+        "batched_s": round(batched_s, 5),
+        "problems_per_sec_loop": round(b / loop_s, 1),
+        "problems_per_sec_batched": round(b / batched_s, 1),
+        "speedup": round(loop_s / batched_s, 1),
+    }
+
+
+def bench_orchestrator(*, k: int = 6, t_cycle: float = 5.0, cycles: int = 8,
+                       total: int = 900) -> dict:
+    """Cycle wall-time of Orchestrator.run eager vs fused (data synthesis,
+    problem build and jit warmup excluded from the timed region)."""
+    import jax
+
+    from repro.data.pipeline import synthetic_mnist
+    from repro.fed.orchestrator import MELConfig, Orchestrator
+    from repro.fed.simulation import build_problem
+    from repro.models import mlp
+
+    train, test = synthetic_mnist(max(total * 2, 6000), seed=0)
+    prob = build_problem(k, t_cycle, total_samples=total, seed=0)
+    mel = MELConfig(T=t_cycle, total_samples=total)
+    eval_batch = (test.x[:2000], test.y[:2000])
+
+    def make_run(fused: bool):
+        # a fresh orchestrator per run (construction excluded from timing)
+        orch = Orchestrator(mel, prob, mlp.loss, mlp.init(jax.random.key(0)), seed=0)
+        if fused:
+            return lambda: orch.run(train, cycles, fused=True,
+                                    eval_fn=mlp.accuracy, eval_batch=eval_batch)
+        import functools
+
+        eval_fn = functools.partial(mlp.accuracy, x=jax.numpy.asarray(eval_batch[0]),
+                                    y=jax.numpy.asarray(eval_batch[1]))
+        return lambda: orch.run(train, cycles, eval_fn=lambda p: eval_fn(p))
+
+    make_run(True)()                 # compile + warmup both paths
+    make_run(False)()
+    run_eager = make_run(False)
+    run_fused = make_run(True)
+    t0 = time.time()
+    run_eager()
+    eager_s = time.time() - t0
+    t0 = time.time()
+    run_fused()
+    fused_s = time.time() - t0
+    return {
+        "K": k,
+        "cycles": cycles,
+        "eager_s": round(eager_s, 3),
+        "fused_s": round(fused_s, 3),
+        "eager_cycle_ms": round(eager_s / cycles * 1e3, 1),
+        "fused_cycle_ms": round(fused_s / cycles * 1e3, 1),
+        "speedup": round(eager_s / fused_s, 2),
+    }
+
+
+def main(quick: bool = False) -> None:
+    shapes = [(64, 10), (1024, 10)] if quick else [(64, 10), (64, 50), (1024, 10), (1024, 50)]
+    loop_sample = 128 if quick else 1024
+
+    print("B,K,prob_per_s_loop,prob_per_s_batched,speedup")
+    alloc_rows = []
+    for b, k in shapes:
+        row = bench_alloc(b, k, loop_sample=loop_sample)
+        alloc_rows.append(row)
+        print(f"{row['B']},{row['K']},{row['problems_per_sec_loop']},"
+              f"{row['problems_per_sec_batched']},{row['speedup']}")
+
+    orch = bench_orchestrator(cycles=4 if quick else 8)
+    print(f"orchestrator eager {orch['eager_cycle_ms']}ms/cycle vs "
+          f"fused {orch['fused_cycle_ms']}ms/cycle ({orch['speedup']}x)")
+
+    OUT_PATH.write_text(json.dumps({
+        "bench": "alloc",
+        "device": "cpu",
+        "alloc": alloc_rows,
+        "orchestrator": orch,
+    }, indent=2) + "\n")
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Sections:
   fig2      staleness vs K (paper Fig. 2)
   fig3      accuracy vs global cycles (paper Fig. 3)
   solvers   analytic SAI vs numerical solvers (Sec. IV/V)
+  alloc     batched allocation engine vs per-problem Python loop (BENCH_alloc.json)
   kernels   hot-spot micro-benchmarks
   roofline  per (arch x shape x mesh) roofline terms from dry-run artifacts
 """
@@ -18,6 +19,7 @@ import time
 
 from benchmarks import (
     accuracy_vs_cycles,
+    alloc_bench,
     kernel_bench,
     roofline_report,
     solver_table,
@@ -27,6 +29,7 @@ from benchmarks import (
 SECTIONS = [
     ("fig2_staleness_vs_k", staleness_vs_k.main),
     ("solver_table", solver_table.main),
+    ("alloc_bench", alloc_bench.main),
     ("kernel_bench", kernel_bench.main),
     ("roofline_report", roofline_report.main),
     ("fig3_accuracy_vs_cycles", accuracy_vs_cycles.main),

@@ -1,0 +1,63 @@
+"""jax version compat: the mesh/shard_map surface moved between jax 0.4.x
+and newer releases. Every call site in repro goes through these wrappers so
+the codebase runs on both (the container pins 0.4.x; newer jax keeps the
+first branch).
+
+  set_mesh(mesh)       jax.set_mesh(mesh) | the Mesh object itself (its own
+                       context manager on 0.4.x)
+  current_mesh()       jax.sharding.get_abstract_mesh() | the thread's
+                       physical mesh
+  shard_map(...)       jax.shard_map(..., axis_names=, check_vma=) |
+                       jax.experimental.shard_map.shard_map(..., auto=,
+                       check_rep=)
+  cost_analysis_dict() compiled.cost_analysis() as a dict (0.4.x wraps it
+                       in a single-element list)
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["set_mesh", "current_mesh", "shard_map", "cost_analysis_dict"]
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # jax<=0.4: Mesh is its own context manager
+
+
+def current_mesh():
+    """The ambient mesh (empty mesh when none is installed)."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    from jax._src.mesh import thread_resources
+
+    return thread_resources.env.physical_mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """``axis_names`` = manual axes (None = all); non-manual axes stay auto."""
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    manual = frozenset(axis_names) if axis_names is not None else frozenset(mesh.axis_names)
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a dict ({} when absent)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # jax<=0.4 returns [dict]
+        cost = cost[0] if cost else {}
+    return cost

@@ -5,9 +5,18 @@ from repro.core.allocation import Allocation, AllocationProblem
 from repro.core.aggregation import aggregate, fedavg_weights, staleness_weights
 from repro.core.baselines import solve_eta, solve_synchronous
 from repro.core.complexity import ModelCost, mlp_cost, mnist_dnn_cost, transformer_cost
+from repro.core.solver_batched import (
+    BatchedAllocation,
+    BatchedProblems,
+    batched_avg_staleness,
+    batched_max_staleness,
+    batched_summary,
+    solve_eta_batched,
+    solve_kkt_batched,
+)
 from repro.core.solver_kkt import solve as solve_kkt_sai
 from repro.core.solver_kkt import solve_relaxed, suggest_and_improve
-from repro.core.solver_numeric import solve_pgd_jax, solve_slsqp
+from repro.core.solver_numeric import solve_pgd_batched, solve_pgd_jax, solve_slsqp
 from repro.core.staleness import avg_staleness, max_staleness
 from repro.core.time_model import (
     ChannelParams,
@@ -20,6 +29,13 @@ from repro.core.time_model import (
 __all__ = [
     "Allocation",
     "AllocationProblem",
+    "BatchedAllocation",
+    "BatchedProblems",
+    "batched_avg_staleness",
+    "batched_max_staleness",
+    "batched_summary",
+    "solve_eta_batched",
+    "solve_kkt_batched",
     "ChannelParams",
     "LearnerProfile",
     "ModelCost",
@@ -34,6 +50,7 @@ __all__ = [
     "pod_slice_profile",
     "solve_eta",
     "solve_kkt_sai",
+    "solve_pgd_batched",
     "solve_pgd_jax",
     "solve_relaxed",
     "solve_slsqp",

@@ -21,7 +21,7 @@ def _integer_sum_fix(d: np.ndarray, prob: AllocationProblem) -> np.ndarray:
     d = np.clip(np.floor(d).astype(np.int64), prob.d_lower, prob.d_upper)
     gap = prob.total_samples - int(d.sum())
     i = 0
-    order = np.argsort(-d)
+    order = np.argsort(-d, kind="stable")  # deterministic tie-break (solver_batched mirrors it)
     while gap != 0:
         k = order[i % len(order)]
         if gap > 0 and d[k] < prob.d_upper:

@@ -1,0 +1,524 @@
+"""Fleet-scale batched allocation engine: device-resident KKT water-filling
+bisection + integer SAI repair for B allocation problems at once.
+
+``solver_kkt`` solves one ``AllocationProblem`` with a NumPy bisection and a
+Python greedy-repair loop — fine for a single fleet, hopeless when a
+scheduling tick must re-solve (tau_k, d_k) for thousands of fleets (FedAST /
+FedAsync-style servers re-allocate continuously as models return). This
+module turns that O(B)-Python-solves path into **one XLA program**:
+
+  * ``BatchedProblems`` — the shared (B, K) problem layout: coefficient
+    tensors ``c2/c1/c0`` and per-learner bounds ``d_lo/d_hi`` of shape
+    (B, K), per-fleet scalars ``T``/``total`` of shape (B,), and a
+    ``valid`` mask so fleets of different sizes batch together (padded
+    learner slots carry ``d_lo = d_hi = 0`` and never receive work).
+  * ``solve_kkt_batched`` — lockstep bisection on the shared water level
+    tau* across all B fleets (the inner residual
+    ``sum_k clip((T - c0)/(c2 tau* + c1), d_l, d_u) - d`` is one
+    ``kernels.ops.waterfill_residual`` call per step, with a Pallas TPU
+    kernel behind ``use_pallas=True``), followed by a vmapped
+    largest-remainder integerization and a vmapped SAI greedy repair, both
+    as bounded ``lax.while_loop``s.
+  * ``solve_eta_batched`` — the equal-task baseline in the same layout.
+  * ``batched_max_staleness`` / ``batched_avg_staleness`` /
+    ``batched_summary`` — (B,)-vectorized fleet metrics.
+
+Numerical contract: with ``x64=True`` (default) every branch of the
+bisection, the stable-sort tie-breaks of the largest-remainder rounding and
+the greedy SAI moves replicate ``solver_kkt.solve`` decision-for-decision,
+so per-problem outputs match the NumPy path exactly up to reduction-order
+ULP noise in the residual sum (which can shift tau* within the bisection
+tolerance and, extremely rarely, move one sample between two learners tied
+at the same remainder — the documented tie-break tolerance).
+``x64=False`` is the float32 device-resident fast path for hardware
+without f64.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.allocation import Allocation, AllocationProblem
+from repro.core.time_model import TimeModel
+
+__all__ = [
+    "BatchedProblems",
+    "BatchedAllocation",
+    "solve_kkt_batched",
+    "solve_eta_batched",
+    "batched_max_staleness",
+    "batched_avg_staleness",
+    "batched_summary",
+]
+
+_INT_SENTINEL = 2**31 - 1
+
+
+# ---------------------------------------------------------------------------
+# problem / solution containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedProblems:
+    """B allocation problems in one (B, K) tensor layout (K = widest fleet).
+
+    ``d_lo``/``d_hi`` are per-learner so heterogeneous fleets and padding
+    share one code path; for real problems every valid learner of fleet b
+    carries that problem's scalar (d_lower, d_upper).
+    """
+
+    c2: np.ndarray        # (B, K)
+    c1: np.ndarray        # (B, K)
+    c0: np.ndarray        # (B, K)
+    T: np.ndarray         # (B,)
+    total: np.ndarray     # (B,) int
+    d_lo: np.ndarray      # (B, K)
+    d_hi: np.ndarray      # (B, K)
+    valid: np.ndarray     # (B, K) bool
+
+    @property
+    def num_problems(self) -> int:
+        return int(self.c2.shape[0])
+
+    @property
+    def max_learners(self) -> int:
+        return int(self.c2.shape[1])
+
+    @staticmethod
+    def from_problems(problems: "list[AllocationProblem]") -> "BatchedProblems":
+        b = len(problems)
+        k = max(p.num_learners for p in problems)
+        c2 = np.ones((b, k)); c1 = np.ones((b, k)); c0 = np.zeros((b, k))
+        d_lo = np.zeros((b, k)); d_hi = np.zeros((b, k))
+        valid = np.zeros((b, k), bool)
+        T = np.zeros(b); total = np.zeros(b, np.int64)
+        for i, p in enumerate(problems):
+            n = p.num_learners
+            tm = p.time_model
+            c2[i, :n], c1[i, :n], c0[i, :n] = tm.c2, tm.c1, tm.c0
+            d_lo[i, :n] = p.d_lower
+            d_hi[i, :n] = p.d_upper
+            valid[i, :n] = True
+            T[i] = p.T
+            total[i] = p.total_samples
+        return BatchedProblems(c2, c1, c0, T, total, d_lo, d_hi, valid)
+
+    def problem(self, i: int) -> AllocationProblem:
+        """Reconstruct the i-th (unpadded) AllocationProblem."""
+        v = self.valid[i]
+        tm = TimeModel(c2=self.c2[i, v], c1=self.c1[i, v], c0=self.c0[i, v])
+        return AllocationProblem(
+            time_model=tm,
+            T=float(self.T[i]),
+            total_samples=int(self.total[i]),
+            d_lower=int(round(float(self.d_lo[i, v].min()))),
+            d_upper=int(round(float(self.d_hi[i, v].max()))),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedAllocation:
+    """Batched solver output; padded slots hold tau = d = 0."""
+
+    tau: np.ndarray           # (B, K) int
+    d: np.ndarray             # (B, K) int
+    feasible: np.ndarray      # (B,) bool
+    valid: np.ndarray         # (B, K) bool
+    method: str = ""
+    relaxed_tau: np.ndarray | None = None   # (B, K)
+    relaxed_d: np.ndarray | None = None     # (B, K)
+    tau_star: np.ndarray | None = None      # (B,)
+
+    @property
+    def num_problems(self) -> int:
+        return int(self.tau.shape[0])
+
+    def allocation(self, i: int) -> Allocation:
+        """Per-problem Allocation (strips padding); raises on infeasible."""
+        if not self.feasible[i]:
+            raise ValueError(f"problem {i} infeasible: deadline cannot absorb d")
+        v = self.valid[i]
+        return Allocation(
+            tau=self.tau[i, v].astype(np.int64),
+            d=self.d[i, v].astype(np.int64),
+            method=self.method,
+            relaxed_tau=None if self.relaxed_tau is None else self.relaxed_tau[i, v],
+            relaxed_d=None if self.relaxed_d is None else self.relaxed_d[i, v],
+        )
+
+    def summary(self, bp: BatchedProblems) -> dict:
+        return batched_summary(bp, self.tau, self.d)
+
+
+# ---------------------------------------------------------------------------
+# batched metrics
+# ---------------------------------------------------------------------------
+
+def batched_max_staleness(tau: np.ndarray, valid: np.ndarray | None = None) -> np.ndarray:
+    """(B,) max-pair staleness  max_k tau - min_k tau  over valid learners."""
+    tau = np.asarray(tau)
+    if valid is None:
+        valid = np.ones(tau.shape, bool)
+    tmax = np.where(valid, tau, -1).max(axis=1)
+    tmin = np.where(valid, tau, _INT_SENTINEL).min(axis=1)
+    n = valid.sum(axis=1)
+    return np.where(n >= 2, tmax - tmin, 0).astype(np.int64)
+
+
+def batched_avg_staleness(tau: np.ndarray, valid: np.ndarray | None = None) -> np.ndarray:
+    """(B,) mean |tau_k - tau_l| over valid pairs k < l (paper Eq. 13)."""
+    tau = np.asarray(tau, dtype=float)
+    if valid is None:
+        valid = np.ones(tau.shape, bool)
+    k = tau.shape[1]
+    diff = np.abs(tau[:, :, None] - tau[:, None, :])
+    pair = (valid[:, :, None] & valid[:, None, :]) & np.triu(np.ones((k, k), bool), 1)
+    n = valid.sum(axis=1)
+    denom = n * (n - 1) / 2.0
+    return np.where(denom > 0, (diff * pair).sum(axis=(1, 2)) / np.maximum(denom, 1.0), 0.0)
+
+
+def batched_summary(bp: BatchedProblems, tau: np.ndarray, d: np.ndarray) -> dict:
+    """Vectorized twin of ``Allocation.summary``: dict of (B,) arrays."""
+    tau = np.asarray(tau); d = np.asarray(d)
+    v = bp.valid
+    t = bp.c2 * tau * d + bp.c1 * d + bp.c0
+    n = np.maximum(v.sum(axis=1), 1)
+    return {
+        "max_staleness": batched_max_staleness(tau, v),
+        "avg_staleness": batched_avg_staleness(tau, v),
+        "total_updates": np.where(v, tau * d, 0).sum(axis=1).astype(np.int64),
+        "min_tau": np.where(v, tau, _INT_SENTINEL).min(axis=1).astype(np.int64),
+        "max_tau": np.where(v, tau, -1).max(axis=1).astype(np.int64),
+        "utilization": np.where(v, t / bp.T[:, None], 0.0).sum(axis=1) / n,
+    }
+
+
+# ---------------------------------------------------------------------------
+# jit building blocks (all shapes per problem unless noted)
+# ---------------------------------------------------------------------------
+
+def _max_tau_of_d(d, c2, c1, c0, T):
+    """Largest integer tau with t_k <= T at integer d (TimeModel.max_tau)."""
+    df = d.astype(c2.dtype)
+    t = jnp.floor((T - c0 - c1 * df) / (c2 * df))
+    t = jnp.where(d > 0, t, 0.0)
+    return jnp.maximum(t, 0.0).astype(d.dtype)
+
+
+def _relaxed_batched(c2, c1, c0, T, total_f, d_lo, d_hi, *, tol, max_iter,
+                     use_pallas, interpret):
+    """Lockstep water-filling bisection over the (B,) batch. Mirrors
+    ``solver_kkt.solve_relaxed`` branch-for-branch per problem."""
+    from repro.kernels import ops
+
+    def resid(tau_star):
+        return ops.waterfill_residual(
+            tau_star, c2, c1, c0, T, d_lo, d_hi, total_f,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+
+    b = c2.shape[0]
+    zero = jnp.zeros((b,), c2.dtype)
+    feasible = resid(zero) >= -1e-9
+
+    # grow hi per problem until the absorbed data drops below total
+    def gcond(state):
+        _, it, r = state
+        return jnp.any(r > 0) & (it < 200)
+
+    def gbody(state):
+        hi, it, r = state
+        hi = jnp.where(r > 0, hi * 2.0, hi)
+        return hi, it + 1, resid(hi)
+
+    hi0 = jnp.ones((b,), c2.dtype)
+    hi0, _, _ = jax.lax.while_loop(gcond, gbody, (hi0, 0, resid(hi0)))
+
+    # bisection; per-problem convergence latches via `done`
+    def bcond(state):
+        lo, hi, steps, done = state
+        return jnp.any(~done) & (steps < max_iter)
+
+    def bbody(state):
+        lo, hi, steps, done = state
+        mid = 0.5 * (lo + hi)
+        r = resid(mid)
+        upd = ~done
+        lo = jnp.where(upd & (r > 0), mid, lo)
+        hi = jnp.where(upd & (r <= 0), mid, hi)
+        done = done | (hi - lo < tol * jnp.maximum(1.0, hi))
+        return lo, hi, steps + 1, done
+
+    lo = jnp.zeros((b,), c2.dtype)
+    lo, hi, steps, _ = jax.lax.while_loop(
+        bcond, bbody, (lo, hi0, 0, jnp.zeros((b,), bool))
+    )
+    tau_star = 0.5 * (lo + hi)
+
+    d = jnp.clip((T[:, None] - c0) / (c2 * tau_star[:, None] + c1), d_lo, d_hi)
+    # spread the bisection's residual gap over unclamped learners
+    free = (d > d_lo + 1e-9) & (d < d_hi - 1e-9)
+    gap = total_f - d.sum(axis=-1)
+    fsum = jnp.sum(jnp.where(free, d, 0.0), axis=-1)
+    add = jnp.where(
+        free & (fsum > 0)[:, None],
+        gap[:, None] * d / jnp.where(fsum > 0, fsum, 1.0)[:, None],
+        0.0,
+    )
+    d = jnp.clip(d + add, d_lo, d_hi)
+    tau = jnp.where(
+        d > 0, jnp.maximum((T[:, None] - c0 - c1 * d) / (c2 * d), 0.0), 0.0
+    )
+    return feasible, tau_star, tau, d, steps
+
+
+def _integerize_one(d_real, total_i, lo_i, hi_i):
+    """Largest-remainder rounding to exact sum within bounds — the
+    ``solver_kkt._integerize_d`` loop as a bounded while_loop."""
+    k = d_real.shape[0]
+    base = jnp.clip(jnp.floor(d_real), lo_i.astype(d_real.dtype),
+                    hi_i.astype(d_real.dtype)).astype(total_i.dtype)
+    rema = d_real - jnp.floor(d_real)
+    order_add = jnp.argsort(-rema, stable=True)
+    order_sub = jnp.argsort(rema, stable=True)
+    deficit0 = total_i - base.sum()
+    pos = deficit0 > 0
+    order = jnp.where(pos, order_add, order_sub)
+    step = jnp.where(pos, 1, -1).astype(base.dtype)
+
+    def cond(state):
+        _, deficit, i = state
+        return (deficit != 0) & (i < 10 * k + jnp.abs(total_i) + 1)
+
+    def body(state):
+        base, deficit, i = state
+        kk = order[i % k]
+        ok = jnp.where(pos, base[kk] < hi_i[kk], base[kk] > lo_i[kk])
+        delta = jnp.where(ok, step, jnp.asarray(0, base.dtype))
+        return base.at[kk].add(delta), deficit - delta, i + 1
+
+    base, deficit, _ = jax.lax.while_loop(cond, body, (base, deficit0, 0))
+    return base, deficit
+
+
+def _sai_one(d0, c2, c1, c0, T, lo_i, hi_i, valid, *, max_rounds):
+    """Greedy suggest-and-improve repair (``solver_kkt.suggest_and_improve``)
+    as a bounded while_loop: move samples from the min-tau learner to the
+    highest-tau learner with headroom while staleness improves."""
+
+    int_dtype = d0.dtype
+    neg_one = jnp.asarray(-1, int_dtype)
+    sentinel = jnp.asarray(_INT_SENTINEL, int_dtype)
+
+    def tau_of(d):
+        return _max_tau_of_d(d, c2, c1, c0, T)
+
+    def stats(tau):
+        tmax = jnp.max(jnp.where(valid, tau, neg_one))
+        tmin = jnp.min(jnp.where(valid, tau, sentinel))
+        return tmax, tmin
+
+    def body(state):
+        d, tau, rounds, _ = state
+        tmax, tmin = stats(tau)
+        s = tmax - tmin
+
+        hi0 = jnp.argmax(jnp.where(valid, tau, neg_one))
+        # min-tau learner freeing the most tau per sample removed (max c2)
+        lo = jnp.argmax(jnp.where(valid & (tau == tmin), c2, -jnp.inf))
+        give = d[lo] - lo_i[lo]
+        room_k = jnp.minimum(hi_i - d, give)
+        room0 = room_k[hi0]
+        # fallback: next-highest-tau learner (above the min) with room
+        elig = valid & (tau > tmin) & (room_k > 0)
+        any_elig = jnp.any(elig)
+        hi1 = jnp.argmax(jnp.where(elig, tau, neg_one))
+        fallback = room0 <= 0
+        hi = jnp.where(fallback, hi1, hi0)
+        room = jnp.where(fallback, room_k[hi1], room0)
+        has_target = jnp.where(fallback, any_elig, True)
+
+        tau_sum = jnp.sum(jnp.where(valid, tau, 0))
+
+        def try_move(m):
+            d2 = d.at[hi].add(m).at[lo].add(-m)
+            tau2 = tau_of(d2)
+            tmax2, tmin2 = stats(tau2)
+            s2 = tmax2 - tmin2
+            better = (s2 < s) | (
+                (s2 == s) & (jnp.sum(jnp.where(valid, tau2, 0)) > tau_sum)
+            )
+            return d2, tau2, better
+
+        m_big = jnp.maximum(jnp.asarray(1, int_dtype), room // 8)
+        d2a, tau2a, acc_a = try_move(m_big)
+        d2b, tau2b, acc_b = try_move(jnp.asarray(1, int_dtype))
+        retry = (~acc_a) & (m_big > 1) & acc_b
+
+        do_move = (s > 0) & has_target & (acc_a | retry)
+        d_new = jnp.where(do_move, jnp.where(acc_a, d2a, d2b), d)
+        tau_new = jnp.where(do_move, jnp.where(acc_a, tau2a, tau2b), tau)
+        return d_new, tau_new, rounds + 1, ~do_move
+
+    def cond(state):
+        return (~state[3]) & (state[2] < max_rounds)
+
+    tau0 = tau_of(d0)
+    d, tau, rounds, _ = jax.lax.while_loop(cond, body, (d0, tau0, 0, False))
+    return tau, d, rounds
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tol", "max_iter", "max_rounds", "use_pallas", "interpret"),
+)
+def _solve_kkt_batched_impl(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *,
+                            tol, max_iter, max_rounds, use_pallas, interpret):
+    total_f = total_i.astype(c2.dtype)
+    feasible, tau_star, tau_r, d_r, _ = _relaxed_batched(
+        c2, c1, c0, T, total_f, d_lo, d_hi,
+        tol=tol, max_iter=max_iter, use_pallas=use_pallas, interpret=interpret,
+    )
+    lo_i = jnp.round(d_lo).astype(total_i.dtype)
+    hi_i = jnp.round(d_hi).astype(total_i.dtype)
+    # neutralize infeasible rows so the integer repair loops terminate fast
+    total_safe = jnp.where(feasible, total_i, lo_i.sum(axis=-1))
+    d_r_safe = jnp.where(feasible[:, None], d_r, d_lo)
+
+    d_int, leftover = jax.vmap(_integerize_one)(d_r_safe, total_safe, lo_i, hi_i)
+    # repair that exhausted its bound without hitting the sum (possible only
+    # for hand-built structs whose box is infeasible — AllocationProblem
+    # rejects those up front) must not masquerade as a solution
+    feasible = feasible & (leftover == 0)
+    tau, d, rounds = jax.vmap(
+        functools.partial(_sai_one, max_rounds=max_rounds)
+    )(d_int, c2, c1, c0, T, lo_i, hi_i, valid)
+    return dict(
+        tau=tau, d=d, feasible=feasible,
+        relaxed_tau=tau_r, relaxed_d=d_r, tau_star=tau_star, sai_rounds=rounds,
+    )
+
+
+# ---------------------------------------------------------------------------
+# host entry points
+# ---------------------------------------------------------------------------
+
+def _as_batched(problems) -> BatchedProblems:
+    if isinstance(problems, BatchedProblems):
+        return problems
+    return BatchedProblems.from_problems(list(problems))
+
+
+def solve_kkt_batched(
+    problems,
+    *,
+    x64: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = False,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+    max_rounds: int = 10_000,
+) -> BatchedAllocation:
+    """Solve B problems (list[AllocationProblem] or BatchedProblems) with the
+    paper's KKT water-filling + SAI pipeline as one jitted XLA program.
+
+    ``x64=True`` reproduces ``solve_kkt_sai`` per problem exactly (modulo
+    the documented remainder-tie tolerance); ``x64=False`` runs float32 for
+    device-resident scheduling. ``use_pallas=True`` routes every bisection
+    residual through the Pallas TPU kernel (``interpret=True`` on CPU); the
+    kernel computes in float32, so it requires ``x64=False``.
+    """
+    if use_pallas and x64:
+        raise ValueError("use_pallas=True computes residuals in float32; "
+                         "pass x64=False (the exact-equivalence path is "
+                         "jnp-reference only)")
+    bp = _as_batched(problems)
+    fdt = np.float64 if x64 else np.float32
+    idt = np.int64 if x64 else np.int32
+    ctx = enable_x64() if x64 else contextlib.nullcontext()
+    with ctx:
+        out = _solve_kkt_batched_impl(
+            jnp.asarray(bp.c2, fdt), jnp.asarray(bp.c1, fdt),
+            jnp.asarray(bp.c0, fdt), jnp.asarray(bp.T, fdt),
+            jnp.asarray(bp.total, idt),
+            jnp.asarray(bp.d_lo, fdt), jnp.asarray(bp.d_hi, fdt),
+            jnp.asarray(bp.valid),
+            tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        out = {k: np.asarray(v) for k, v in out.items()}
+    return BatchedAllocation(
+        tau=out["tau"].astype(np.int64),
+        d=out["d"].astype(np.int64),
+        feasible=out["feasible"],
+        valid=np.asarray(bp.valid, bool),
+        method="kkt_sai_batched",
+        relaxed_tau=out["relaxed_tau"],
+        relaxed_d=out["relaxed_d"],
+        tau_star=out["tau_star"],
+    )
+
+
+def _eta_one(total_i, lo_i, hi_i, valid, c2, c1, c0, T):
+    k = lo_i.shape[0]
+    n_valid = jnp.maximum(valid.sum(), 1)
+    base = total_i // n_valid
+    rem = total_i - base * n_valid
+    rank = jnp.cumsum(valid.astype(total_i.dtype)) - 1
+    d = jnp.where(valid, base + (rank < rem).astype(total_i.dtype), 0)
+    d = jnp.clip(d, lo_i, hi_i)
+    order = jnp.argsort(-d, stable=True)
+
+    def cond(state):
+        _, gap, i = state
+        return (gap != 0) & (i < 100 * k + jnp.abs(total_i) + 1)
+
+    def body(state):
+        d, gap, i = state
+        kk = order[i % k]
+        delta = jnp.where(
+            (gap > 0) & (d[kk] < hi_i[kk]), 1,
+            jnp.where((gap < 0) & (d[kk] > lo_i[kk]), -1, 0),
+        ).astype(d.dtype)
+        return d.at[kk].add(delta), gap - delta, i + 1
+
+    d, gap, _ = jax.lax.while_loop(cond, body, (d, total_i - d.sum(), 0))
+    tau = _max_tau_of_d(d, c2, c1, c0, T)
+    return tau, d, gap == 0
+
+
+@jax.jit
+def _solve_eta_batched_impl(c2, c1, c0, T, total_i, lo_i, hi_i, valid):
+    return jax.vmap(_eta_one)(total_i, lo_i, hi_i, valid, c2, c1, c0, T)
+
+
+def solve_eta_batched(problems, *, x64: bool = True) -> BatchedAllocation:
+    """Equal-task-allocation baseline (``baselines.solve_eta``) over a batch:
+    d_k = d/K spread by index, bound-clipped, integer-sum repaired, then
+    tau_k maximal per learner."""
+    bp = _as_batched(problems)
+    fdt = np.float64 if x64 else np.float32
+    idt = np.int64 if x64 else np.int32
+    ctx = enable_x64() if x64 else contextlib.nullcontext()
+    with ctx:
+        tau, d, ok = _solve_eta_batched_impl(
+            jnp.asarray(bp.c2, fdt), jnp.asarray(bp.c1, fdt),
+            jnp.asarray(bp.c0, fdt), jnp.asarray(bp.T, fdt),
+            jnp.asarray(bp.total, idt),
+            jnp.asarray(np.round(bp.d_lo), idt), jnp.asarray(np.round(bp.d_hi), idt),
+            jnp.asarray(bp.valid),
+        )
+        tau, d, ok = np.asarray(tau), np.asarray(d), np.asarray(ok)
+    return BatchedAllocation(
+        tau=tau.astype(np.int64), d=d.astype(np.int64), feasible=ok,
+        valid=np.asarray(bp.valid, bool), method="eta_batched",
+    )

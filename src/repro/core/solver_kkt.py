@@ -117,8 +117,10 @@ def _integerize_d(prob: AllocationProblem, d_real: np.ndarray) -> np.ndarray:
     if deficit > 0:
         # hand out one sample at a time to the learners with largest remainder
         # that still have headroom
+        # stable sorts keep tie-breaks deterministic and index-ordered so the
+        # batched engine (solver_batched) reproduces this exactly
         rema = d_real - np.floor(d_real)
-        order = np.argsort(-rema)
+        order = np.argsort(-rema, kind="stable")
         i = 0
         while deficit > 0:
             k = order[i % len(order)]
@@ -129,7 +131,7 @@ def _integerize_d(prob: AllocationProblem, d_real: np.ndarray) -> np.ndarray:
             if i > 10 * len(order) + prob.total_samples:
                 raise RuntimeError("integerize: could not place all samples")
     elif deficit < 0:
-        order = np.argsort(d_real - np.floor(d_real))
+        order = np.argsort(d_real - np.floor(d_real), kind="stable")
         i = 0
         while deficit < 0:
             k = order[i % len(order)]
@@ -168,7 +170,7 @@ def suggest_and_improve(
         room = min(prob.d_upper - int(d[hi]), int(d[lo]) - prob.d_lower)
         if room <= 0:
             # try the next-highest tau learner with room
-            order = np.argsort(-tau)
+            order = np.argsort(-tau, kind="stable")
             moved = False
             for cand in order:
                 if tau[cand] == tau.min():

@@ -30,9 +30,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.allocation import Allocation, AllocationProblem
+from repro.core.solver_batched import BatchedProblems
 from repro.core.solver_kkt import suggest_and_improve
 
-__all__ = ["solve_slsqp", "solve_pgd_jax", "pgd_relaxed_batch"]
+__all__ = ["solve_slsqp", "solve_pgd_jax", "pgd_relaxed_batch", "solve_pgd_batched"]
 
 
 # ---------------------------------------------------------------------------
@@ -153,13 +154,48 @@ def _pgd_run(d0, c2, c1, c0, T, d_lo, d_hi, total, steps: int):
     return tau, d
 
 
-# vmap across a batch of allocation problems (fleet-scale scheduling tick)
-pgd_relaxed_batch = jax.vmap(
-    lambda d0, c2, c1, c0, T, d_lo, d_hi, total: _pgd_run(
-        d0, c2, c1, c0, T, d_lo, d_hi, total, 600
-    ),
-    in_axes=(0, 0, 0, 0, 0, 0, 0, 0),
-)
+# vmap across a batch of allocation problems (fleet-scale scheduling tick);
+# one cached vmapped program per static step count, sharing _pgd_run with
+# the single-problem path
+@functools.lru_cache(maxsize=None)
+def _pgd_batch_fn(steps: int):
+    return jax.vmap(
+        lambda d0, c2, c1, c0, T, d_lo, d_hi, total: _pgd_run(
+            d0, c2, c1, c0, T, d_lo, d_hi, total, steps
+        ),
+        in_axes=(0, 0, 0, 0, 0, 0, 0, 0),
+    )
+
+
+def pgd_relaxed_batch(d0, c2, c1, c0, T, d_lo, d_hi, total, *, steps: int = 600):
+    """Batched relaxed PGD: all args have a leading problem axis B; ``steps``
+    is a static compile-time argument."""
+    return _pgd_batch_fn(steps)(d0, c2, c1, c0, T, d_lo, d_hi, total)
+
+
+def solve_pgd_batched(bp: BatchedProblems, *, steps: int = 600):
+    """Relaxed PGD over a ``BatchedProblems`` struct — the same (B, K)
+    layout the batched KKT engine consumes. Requires unpadded batches with
+    per-problem-uniform bounds (PGD has no per-learner box/mask support).
+    Returns continuous (tau, d) of shape (B, K)."""
+    if not np.all(bp.valid):
+        raise ValueError("solve_pgd_batched requires unpadded batches "
+                         "(equal fleet sizes); use solve_kkt_batched for mixed K")
+    if np.any(bp.d_lo != bp.d_lo[:, :1]) or np.any(bp.d_hi != bp.d_hi[:, :1]):
+        raise ValueError("solve_pgd_batched requires per-problem-uniform "
+                         "d_lo/d_hi; use solve_kkt_batched for per-learner bounds")
+    b, k = bp.c2.shape
+    d_lo = bp.d_lo[:, 0].astype(np.float32)
+    d_hi = bp.d_hi[:, 0].astype(np.float32)
+    total = bp.total.astype(np.float32)
+    d0 = np.clip((total / k)[:, None].repeat(k, axis=1), d_lo[:, None], d_hi[:, None])
+    return pgd_relaxed_batch(
+        jnp.asarray(d0, jnp.float32),
+        jnp.asarray(bp.c2, jnp.float32), jnp.asarray(bp.c1, jnp.float32),
+        jnp.asarray(bp.c0, jnp.float32), jnp.asarray(bp.T, jnp.float32),
+        jnp.asarray(d_lo), jnp.asarray(d_hi), jnp.asarray(total),
+        steps=steps,
+    )
 
 
 def solve_pgd_jax(prob: AllocationProblem, *, steps: int = 600) -> Allocation:

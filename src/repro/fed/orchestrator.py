@@ -12,6 +12,21 @@ One global cycle of wall-clock budget ``T``:
 
 The simulated wall-clock of a cycle is T by construction (constraint 7b of
 the paper: every learner works the full cycle).
+
+Two execution paths:
+
+  * ``run`` / ``run_cycle`` — eager: one host round-trip per global cycle
+    (NumPy shard staging -> jit local_train -> aggregate). Supports
+    per-cycle re-allocation and arbitrary host eval callbacks.
+  * ``run_fused`` (or ``run(..., fused=True)``) — fast path: shards for
+    ALL cycles are drawn up front, padded into one (C, K, d_max, F)
+    device-resident tensor, and allocate -> local_train ->
+    staleness-weighted aggregation runs as a single jitted ``lax.scan``
+    over global cycles with the carried params buffer donated. The
+    aggregation contraction goes through ``kernels.ops.fed_agg``
+    (Pallas on TPU via ``use_pallas=True``). Trades C× shard memory for
+    zero per-cycle host staging; allocation is fixed over the scan
+    (reallocate is an eager-path feature).
 """
 
 from __future__ import annotations
@@ -91,6 +106,50 @@ def local_train(global_params, x, y, mask, tau, lr, *, max_tau: int, loss_fn):
     return jax.vmap(one_learner)(stacked, x, y, mask, tau)
 
 
+def _stage_shards(shards: "list[Dataset]", d_max: int, feat: int):
+    """Zero-pad per-learner shards into (K, d_max, ...) host arrays with a
+    validity mask — shared by the eager per-cycle path and the fused
+    pre-staging so their padding semantics cannot diverge."""
+    k = len(shards)
+    x = np.zeros((k, d_max, feat), np.float32)
+    y = np.zeros((k, d_max), np.int32)
+    m = np.zeros((k, d_max), np.float32)
+    for i, sh in enumerate(shards):
+        n = sh.size
+        x[i, :n], y[i, :n], m[i, :n] = sh.x, sh.y, 1.0
+    return x, y, m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_tau", "loss_fn", "eval_fn", "use_pallas", "interpret"),
+    donate_argnums=(0,),
+)
+def _fused_cycles(params, xs, ys, ms, tau, weights, lr, eval_x, eval_y, *,
+                  max_tau: int, loss_fn, eval_fn, use_pallas: bool,
+                  interpret: bool):
+    """One XLA program for C global cycles: scan(allocated local_train ->
+    fed_agg) with the params carry donated. xs: (C, K, d_max, F);
+    ys/ms: (C, K, d_max); tau/weights: (K,)."""
+    from repro.kernels import ops
+
+    def one_cycle(p, batch):
+        x, y, m = batch
+        locals_ = local_train(
+            p, x, y, m, tau, lr, max_tau=max_tau, loss_fn=loss_fn
+        )
+        new = jax.tree_util.tree_map(
+            lambda leaf: ops.fed_agg(
+                leaf, weights, use_pallas=use_pallas, interpret=interpret
+            ),
+            locals_,
+        )
+        acc = eval_fn(new, eval_x, eval_y) if eval_fn is not None else jnp.float32(0)
+        return new, acc
+
+    return jax.lax.scan(one_cycle, params, (xs, ys, ms))
+
+
 class Orchestrator:
     def __init__(
         self,
@@ -113,16 +172,9 @@ class Orchestrator:
         alloc = self.allocation
         tau = np.asarray(alloc.tau)
         d = np.asarray(alloc.d)
-        k = len(shards)
         d_max = int(d.max())
         feat = shards[0].x.shape[1]
-
-        x = np.zeros((k, d_max, feat), np.float32)
-        y = np.zeros((k, d_max), np.int32)
-        m = np.zeros((k, d_max), np.float32)
-        for i, sh in enumerate(shards):
-            n = sh.size
-            x[i, :n], y[i, :n], m[i, :n] = sh.x, sh.y, 1.0
+        x, y, m = _stage_shards(shards, d_max, feat)
 
         max_tau = max(int(tau.max()), 1)
         locals_ = local_train(
@@ -144,7 +196,26 @@ class Orchestrator:
         }
 
     # -- full run -------------------------------------------------------------
-    def run(self, train: Dataset, cycles: int, *, eval_fn=None, reallocate: bool = False) -> list[dict]:
+    def run(
+        self,
+        train: Dataset,
+        cycles: int,
+        *,
+        eval_fn=None,
+        reallocate: bool = False,
+        fused: bool = False,
+        eval_batch=None,
+        use_pallas: bool = False,
+        interpret: bool = False,
+    ) -> list[dict]:
+        if fused:
+            if reallocate:
+                raise ValueError("fused fast path keeps allocation fixed; "
+                                 "use the eager path for reallocate=True")
+            return self.run_fused(
+                train, cycles, eval_fn=eval_fn, eval_batch=eval_batch,
+                use_pallas=use_pallas, interpret=interpret,
+            )
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         history = []
         for c in range(cycles):
@@ -156,5 +227,75 @@ class Orchestrator:
             rec["elapsed_s"] = (c + 1) * self.mel.T
             if eval_fn is not None:
                 rec["accuracy"] = float(eval_fn(self.params))
+            history.append(rec)
+        return history
+
+    # -- fused fast path ------------------------------------------------------
+    def run_fused(
+        self,
+        train: Dataset,
+        cycles: int,
+        *,
+        eval_fn=None,
+        eval_batch=None,
+        use_pallas: bool = False,
+        interpret: bool = False,
+    ) -> list[dict]:
+        """Fused scan-over-cycles twin of ``run``: same shard draws, same
+        allocation, one jitted lax.scan instead of C host round-trips.
+
+        ``eval_fn`` here must be jit-traceable with signature
+        ``eval_fn(params, x, y) -> scalar`` (e.g. ``mlp.accuracy``) and is
+        evaluated inside the scan on ``eval_batch = (x, y)``; pass None to
+        skip per-cycle eval.
+        """
+        alloc = self.allocation
+        tau = np.asarray(alloc.tau)
+        d = np.asarray(alloc.d)
+        k = len(d)
+        d_max = int(d.max())
+        feat = train.x.shape[1]
+
+        # identical shard sequence to the eager path (same rng consumption)
+        part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
+        xs = np.zeros((cycles, k, d_max, feat), np.float32)
+        ys = np.zeros((cycles, k, d_max), np.int32)
+        ms = np.zeros((cycles, k, d_max), np.float32)
+        for c in range(cycles):
+            xs[c], ys[c], ms[c] = _stage_shards(part.draw(d), d_max, feat)
+
+        if self.mel.aggregation == "staleness":
+            w = staleness_weights(tau, d, gamma=self.mel.staleness_gamma)
+        else:
+            w = fedavg_weights(d)
+
+        if eval_fn is not None and eval_batch is None:
+            raise ValueError("run_fused needs eval_batch=(x, y) with eval_fn")
+        ex = jnp.asarray(eval_batch[0]) if eval_fn is not None else None
+        ey = jnp.asarray(eval_batch[1]) if eval_fn is not None else None
+
+        max_tau = max(int(tau.max()), 1)
+        self.params, accs = _fused_cycles(
+            self.params, jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(ms),
+            jnp.asarray(tau), jnp.asarray(w),
+            jnp.asarray(self.mel.lr, jnp.float32), ex, ey,
+            max_tau=max_tau, loss_fn=self.loss_fn, eval_fn=eval_fn,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        accs = np.asarray(accs)
+
+        history = []
+        for c in range(cycles):
+            rec = {
+                "max_staleness": max_staleness(tau),
+                "avg_staleness": avg_staleness(tau),
+                "tau": tau.copy(),
+                "d": d.copy(),
+                "wall_clock_s": self.mel.T,
+                "cycle": c,
+                "elapsed_s": (c + 1) * self.mel.T,
+            }
+            if eval_fn is not None:
+                rec["accuracy"] = float(accs[c])
             history.append(rec)
         return history

@@ -17,9 +17,13 @@ import jax
 
 from repro.core import (
     AllocationProblem,
+    BatchedProblems,
     TimeModel,
+    batched_summary,
     indoor_80211_profile,
     mnist_dnn_cost,
+    solve_eta_batched,
+    solve_kkt_batched,
 )
 from repro.data.pipeline import Dataset, synthetic_mnist
 from repro.fed.orchestrator import MELConfig, Orchestrator, SCHEMES
@@ -51,24 +55,70 @@ def build_problem(
     )
 
 
+_BATCHED_SCHEMES = {"kkt_sai": solve_kkt_batched, "eta": solve_eta_batched}
+
+
 def staleness_sweep(ks, T: float, *, schemes=("kkt_sai", "slsqp", "eta"), seed: int = 0,
-                    total_samples: int = 6000) -> list[dict]:
-    """Fig. 2: max/avg staleness vs number of learners K per scheme."""
-    rows = []
-    for k in ks:
-        prob = build_problem(k, T, seed=seed, total_samples=total_samples)
+                    total_samples: int = 6000, seeds=None,
+                    use_batched: bool = True) -> list[dict]:
+    """Fig. 2: max/avg staleness vs number of learners K per scheme.
+
+    With ``use_batched`` (default) every (K, seed) fleet is padded into one
+    ``BatchedProblems`` tensor and each batched scheme (kkt_sai, eta) is ONE
+    ``solve_*_batched`` call for the whole sweep; remaining schemes fall
+    back to the per-problem solvers. On feasible points the rows are
+    identical to the eager path (the batched engine replicates the NumPy
+    solvers exactly); infeasible points carry the same error message for
+    the bisection-infeasibility case the batched solver detects.
+    """
+    seeds = (seed,) if seeds is None else tuple(seeds)
+    cases = [(k, s) for k in ks for s in seeds]
+    probs = [
+        build_problem(k, T, seed=s, total_samples=total_samples)
+        for k, s in cases
+    ]
+
+    rows: list[dict] = []
+    batched = {}
+    if use_batched:
+        bp = BatchedProblems.from_problems(probs)
         for scheme in schemes:
+            if scheme in _BATCHED_SCHEMES:
+                ba = _BATCHED_SCHEMES[scheme](bp)
+                batched[scheme] = (ba, ba.summary(bp))
+
+    for i, ((k, s), prob) in enumerate(zip(cases, probs)):
+        for scheme in schemes:
+            row = {"K": k, "T": T, "scheme": scheme}
+            if len(seeds) > 1:
+                row["seed"] = s
+            if scheme in batched:
+                ba, summ = batched[scheme]
+                if not ba.feasible[i]:
+                    # same wording as solver_kkt.solve_relaxed's ValueError
+                    row["error"] = (
+                        "infeasible: even with tau=0 the deadline T cannot "
+                        "absorb d samples"
+                    )
+                else:
+                    row.update(
+                        max_staleness=int(summ["max_staleness"][i]),
+                        avg_staleness=float(summ["avg_staleness"][i]),
+                        total_updates=int(summ["total_updates"][i]),
+                    )
+                rows.append(row)
+                continue
             try:
                 alloc = SCHEMES[scheme](prob)
-                s = alloc.summary(prob)
-                rows.append({
-                    "K": k, "T": T, "scheme": scheme,
-                    "max_staleness": s["max_staleness"],
-                    "avg_staleness": s["avg_staleness"],
-                    "total_updates": s["total_updates"],
-                })
+                sm = alloc.summary(prob)
+                row.update(
+                    max_staleness=sm["max_staleness"],
+                    avg_staleness=sm["avg_staleness"],
+                    total_updates=sm["total_updates"],
+                )
             except ValueError as e:
-                rows.append({"K": k, "T": T, "scheme": scheme, "error": str(e)})
+                row["error"] = str(e)
+            rows.append(row)
     return rows
 
 
@@ -84,8 +134,15 @@ def run_experiment(
     seed: int = 0,
     train: Dataset | None = None,
     test: Dataset | None = None,
+    fused: bool = False,
+    use_pallas: bool = False,
 ) -> dict:
-    """One full MEL run; returns history with accuracy per global cycle."""
+    """One full MEL run; returns history with accuracy per global cycle.
+
+    ``fused=True`` routes through the orchestrator's scan-over-cycles fast
+    path (one XLA program for the whole run, eval inside the scan) and
+    reproduces the eager history for the same seed.
+    """
     if train is None or test is None:
         train, test = synthetic_mnist(max(total_samples * 2, 12_000), seed=seed)
     prob = build_problem(k, T, total_samples=total_samples, seed=seed)
@@ -95,8 +152,14 @@ def run_experiment(
     params = mlp.init(jax.random.key(seed))
     orch = Orchestrator(mel, prob, mlp.loss, params, seed=seed)
 
-    eval_fn = functools.partial(_accuracy, x=test.x[:2000], y=test.y[:2000])
-    history = orch.run(train, cycles, eval_fn=eval_fn)
+    if fused:
+        history = orch.run(
+            train, cycles, fused=True, eval_fn=mlp.accuracy,
+            eval_batch=(test.x[:2000], test.y[:2000]), use_pallas=use_pallas,
+        )
+    else:
+        eval_fn = functools.partial(_accuracy, x=test.x[:2000], y=test.y[:2000])
+        history = orch.run(train, cycles, eval_fn=eval_fn)
     return {
         "scheme": scheme,
         "K": k,

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 __all__ = ["fed_agg_pallas"]
 
 
@@ -46,7 +48,7 @@ def fed_agg_pallas(stacked, weights, *, block_n: int = 2048, interpret: bool = F
         ],
         out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, flat.shape[1]), stacked.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -12,7 +12,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["flash_attention", "wkv6", "fed_agg", "swiglu_fused", "mamba_scan"]
+__all__ = [
+    "flash_attention",
+    "wkv6",
+    "fed_agg",
+    "swiglu_fused",
+    "mamba_scan",
+    "waterfill_residual",
+]
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, chunk=512,
@@ -52,6 +59,22 @@ def fed_agg(stacked, weights, *, use_pallas=False, interpret=False):
         return fed_agg_pallas(stacked, weights, interpret=interpret)
     w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(jnp.float32)
     return (stacked.astype(jnp.float32) * w).sum(axis=0).astype(stacked.dtype)
+
+
+def waterfill_residual(tau_star, c2, c1, c0, T, d_lo, d_hi, total, *,
+                       use_pallas=False, interpret=False):
+    """Batched water-filling residual sum_k clip((T-c0)/(c2*tau+c1), lo, hi)
+    - total for a (B, K) fleet batch — the inner evaluation of every
+    bisection step in ``core.solver_batched``."""
+    if use_pallas:
+        from repro.kernels.waterfill import waterfill_residual_pallas
+
+        return waterfill_residual_pallas(
+            tau_star, c2, c1, c0, T, d_lo, d_hi, total, interpret=interpret
+        )
+    from repro.kernels.ref import waterfill_residual_ref
+
+    return waterfill_residual_ref(tau_star, c2, c1, c0, T, d_lo, d_hi, total)
 
 
 def swiglu_fused(x, w_gate, w_up, w_down, *, use_pallas=False, interpret=False):

@@ -6,7 +6,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "wkv6_ref", "fed_agg_ref", "swiglu_ref", "mamba_scan_ref"]
+__all__ = [
+    "flash_attention_ref",
+    "wkv6_ref",
+    "fed_agg_ref",
+    "swiglu_ref",
+    "mamba_scan_ref",
+    "waterfill_residual_ref",
+]
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None):
@@ -45,6 +52,13 @@ def swiglu_ref(x, w_gate, w_up, w_down):
     from repro.models.layers import swiglu
 
     return swiglu(x, w_gate, w_up, w_down)
+
+
+def waterfill_residual_ref(tau_star, c2, c1, c0, T, d_lo, d_hi, total):
+    """Batched KKT water-filling residual (core.solver_batched layout):
+    tau_star/T/total: (B,); c2/c1/c0/d_lo/d_hi: (B, K). Returns (B,)."""
+    d = (T[:, None] - c0) / (c2 * tau_star[:, None] + c1)
+    return jnp.clip(d, d_lo, d_hi).sum(axis=-1) - total
 
 
 def mamba_scan_ref(dt, x, b, c, a, h0=None):

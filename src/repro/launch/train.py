@@ -17,6 +17,8 @@ import time
 import numpy as np
 
 import jax
+
+from repro.compat import set_mesh
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced
@@ -70,7 +72,7 @@ def main() -> None:
         return b
 
     jitted = jax.jit(step)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for i in range(args.steps):
             t0 = time.time()
             batch = {k: jnp.asarray(v) for k, v in with_extras(next(gen)).items()}

@@ -146,7 +146,9 @@ def moe_apply(cfg: ArchConfig, p, x, *, train: bool = False):
     capacity = _capacity(s, cfg.top_k, cfg.num_experts, cfg.capacity_factor)
     gates = gates.astype(cd)
 
-    am = jax.sharding.get_abstract_mesh()
+    from repro.compat import current_mesh, shard_map as _shard_map_compat
+
+    am = current_mesh()
     batch_axes = tuple(a for a in ("pod", "data") if a in am.axis_names)
     n_shards = 1
     for a in batch_axes:
@@ -157,7 +159,7 @@ def moe_apply(cfg: ArchConfig, p, x, *, train: bool = False):
     # (prefill/decode) are proven and keep the fix. See EXPERIMENTS §Perf.
     if cfg.moe_shard_map and not train and batch_axes and b % n_shards == 0:
         spec = P(batch_axes, None, None)
-        routed = jax.shard_map(
+        routed = _shard_map_compat(
             lambda xg, gg, ig, pp: _routed_vmap(xg, gg, ig, pp, cfg, capacity),
             mesh=am,
             in_specs=(spec, spec, spec, P()),

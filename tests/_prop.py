@@ -1,0 +1,68 @@
+"""Property-test compat layer: real hypothesis when installed, otherwise a
+fixed-seed degradation so the suite collects and runs without the optional
+dependency (declared as the ``test`` extra in pyproject.toml).
+
+The fallback implements just the surface these tests use — ``given`` with
+keyword strategies, ``settings`` as a no-op decorator, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies — and replays each
+property over a deterministic batch of examples drawn from one seeded rng
+(no shrinking, no database)."""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def draw(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # deliberately NOT functools.wraps: pytest must see a bare
+            # () signature, not the strategy params (it would treat them
+            # as fixtures)
+            def wrapper():
+                rng = _np.random.default_rng(0)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    draws = {name: s.draw(rng) for name, s in strategies.items()}
+                    fn(**draws)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

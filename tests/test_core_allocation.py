@@ -10,7 +10,7 @@ heterogeneous fleets:
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st  # hypothesis, or fixed-seed fallback
 
 from repro.core import (
     AllocationProblem,

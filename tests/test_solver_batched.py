@@ -1,0 +1,263 @@
+"""Batched allocation engine: per-problem equivalence with the NumPy
+KKT+SAI pipeline, Pallas water-filling residual parity, mixed-K padding,
+and the fused scan-over-cycles orchestrator against the eager loop."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AllocationProblem,
+    BatchedProblems,
+    TimeModel,
+    batched_avg_staleness,
+    batched_max_staleness,
+    indoor_80211_profile,
+    mnist_dnn_cost,
+    pod_slice_profile,
+    solve_eta,
+    solve_eta_batched,
+    solve_kkt_batched,
+    solve_kkt_sai,
+    solve_pgd_batched,
+)
+from repro.core.solver_kkt import solve_relaxed
+
+
+def make_problem(k=10, T=15.0, d=6000, seed=0, profile="edge"):
+    cost = mnist_dnn_cost()
+    profs = (
+        indoor_80211_profile(k, seed=seed)
+        if profile == "edge"
+        else pod_slice_profile(k, seed=seed)
+    )
+    tm = TimeModel.build(
+        profs,
+        model_complexity_flops=cost.flops_per_sample,
+        model_size_bits=cost.model_bits,
+    )
+    return AllocationProblem(
+        time_model=tm,
+        T=T,
+        total_samples=d,
+        d_lower=max(1, d // (4 * k)),
+        d_upper=min(d, 3 * d // k),
+    )
+
+
+def _random_feasible_problems(n=30):
+    """Randomized feasible instances across fleet sizes, budgets, profiles."""
+    rng = np.random.default_rng(42)
+    probs = []
+    while len(probs) < n:
+        k = int(rng.integers(3, 14))
+        T = float(rng.choice([5.0, 7.5, 15.0, 30.0]))
+        d = int(rng.choice([2000, 4000, 6000]))
+        profile = str(rng.choice(["edge", "pod"]))
+        seed = int(rng.integers(0, 10_000))
+        prob = make_problem(k=k, T=T, d=d, seed=seed, profile=profile)
+        try:
+            solve_relaxed(prob)  # keep only time-feasible instances
+        except ValueError:
+            continue
+        probs.append(prob)
+    return probs
+
+
+# ---------------------------------------------------------------------------
+# solve_kkt_batched vs per-problem solve_kkt_sai
+# ---------------------------------------------------------------------------
+
+def test_kkt_batched_matches_per_problem_randomized():
+    """Per-problem (tau, d) exact match over randomized feasible instances.
+
+    Documented tie-break tolerance: the batched residual reduction can
+    differ from NumPy's pairwise sum by last-ulp noise, which may shift
+    tau* within the bisection tolerance and flip a remainder tie; we allow
+    at most 10% such problems, and they must still be feasible with the
+    same max staleness and per-entry |delta d| <= 2.
+    """
+    probs = _random_feasible_problems(30)
+    refs = [solve_kkt_sai(p) for p in probs]
+    ba = solve_kkt_batched(probs)
+    assert bool(ba.feasible.all())
+
+    mismatched = 0
+    for i, (p, ref) in enumerate(zip(probs, refs)):
+        got = ba.allocation(i)
+        got.validate(p)
+        if np.array_equal(got.tau, ref.tau) and np.array_equal(got.d, ref.d):
+            continue
+        mismatched += 1
+        assert int(got.tau.max() - got.tau.min()) == int(ref.tau.max() - ref.tau.min())
+        assert np.abs(got.d - ref.d).max() <= 2
+    assert mismatched <= len(probs) // 10, f"{mismatched} tie-break mismatches"
+
+
+def test_kkt_batched_relaxed_matches_reference():
+    probs = [make_problem(k=8, seed=s) for s in (0, 3, 7)]
+    ba = solve_kkt_batched(probs)
+    for i, p in enumerate(probs):
+        tau_r, d_r, tau_star, _ = solve_relaxed(p)
+        np.testing.assert_allclose(ba.relaxed_d[i, : p.num_learners], d_r, rtol=1e-8)
+        np.testing.assert_allclose(ba.relaxed_tau[i, : p.num_learners], tau_r, rtol=1e-8)
+        np.testing.assert_allclose(ba.tau_star[i], tau_star, rtol=1e-6)
+
+
+def test_kkt_batched_mixed_fleet_sizes_padded():
+    """Fleets of different K batch together via the valid mask."""
+    probs = [make_problem(k=k, seed=k) for k in (4, 7, 11)]
+    ba = solve_kkt_batched(probs)
+    assert ba.tau.shape == (3, 11)
+    for i, p in enumerate(probs):
+        ref = solve_kkt_sai(p)
+        got = ba.allocation(i)
+        got.validate(p)
+        np.testing.assert_array_equal(got.tau, ref.tau)
+        np.testing.assert_array_equal(got.d, ref.d)
+        # padded slots carry no work
+        assert not ba.d[i, p.num_learners:].any()
+        assert not ba.tau[i, p.num_learners:].any()
+
+
+def test_kkt_batched_flags_infeasible():
+    """A deadline too tight to absorb d is flagged, not silently solved,
+    and does not poison the feasible problems sharing the batch."""
+    ok = make_problem(k=6, T=15.0, d=2000)
+    tm = ok.time_model
+    bad = AllocationProblem(
+        time_model=tm, T=float(np.max(tm.c0) * 1.01), total_samples=2000,
+        d_lower=1, d_upper=2000,
+    )
+    with pytest.raises(ValueError):
+        solve_relaxed(bad)
+    ba = solve_kkt_batched([ok, bad])
+    assert bool(ba.feasible[0]) and not bool(ba.feasible[1])
+    ref = solve_kkt_sai(ok)
+    np.testing.assert_array_equal(ba.allocation(0).tau, ref.tau)
+    with pytest.raises(ValueError):
+        ba.allocation(1)
+
+
+def test_eta_batched_matches_per_problem():
+    probs = [make_problem(k=k, T=7.5, seed=s) for k in (5, 9) for s in (0, 4)]
+    be = solve_eta_batched(probs)
+    for i, p in enumerate(probs):
+        ref = solve_eta(p)
+        got = be.allocation(i)
+        got.validate(p)
+        np.testing.assert_array_equal(got.tau, ref.tau)
+        np.testing.assert_array_equal(got.d, ref.d)
+
+
+def test_batched_staleness_metrics():
+    tau = np.array([[3, 7, 5, 0], [2, 2, 2, 9]])
+    valid = np.array([[True, True, True, False], [True, True, True, False]])
+    np.testing.assert_array_equal(batched_max_staleness(tau, valid), [4, 0])
+    np.testing.assert_allclose(
+        batched_avg_staleness(tau, valid), [(4 + 2 + 2) / 3.0, 0.0]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pallas water-filling residual kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,k", [(4, 10), (8, 128), (13, 37), (3, 150)])
+def test_waterfill_residual_pallas_parity(b, k):
+    from repro.kernels import ops
+    from repro.kernels.ref import waterfill_residual_ref
+
+    rng = np.random.default_rng(b * 100 + k)
+    c2 = jnp.asarray(rng.uniform(1e-4, 1e-2, (b, k)), jnp.float32)
+    c1 = jnp.asarray(rng.uniform(1e-4, 1e-2, (b, k)), jnp.float32)
+    c0 = jnp.asarray(rng.uniform(0.1, 2.0, (b, k)), jnp.float32)
+    T = jnp.asarray(rng.uniform(5.0, 20.0, (b,)), jnp.float32)
+    lo = jnp.full((b, k), 10.0, jnp.float32)
+    hi = jnp.full((b, k), 900.0, jnp.float32)
+    tot = jnp.asarray(rng.uniform(1e3, 5e3, (b,)), jnp.float32)
+    tau = jnp.asarray(rng.uniform(0.0, 50.0, (b,)), jnp.float32)
+
+    want = waterfill_residual_ref(tau, c2, c1, c0, T, lo, hi, tot)
+    got = ops.waterfill_residual(
+        tau, c2, c1, c0, T, lo, hi, tot, use_pallas=True, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-3)
+
+
+def test_kkt_batched_via_pallas_residual():
+    """The full batched solve with every bisection step through the Pallas
+    kernel (interpret mode, f32) stays feasible and near the f64 solution."""
+    probs = [make_problem(k=6, T=15.0, d=2000, seed=s) for s in (0, 1)]
+    ba64 = solve_kkt_batched(probs)
+    ba32 = solve_kkt_batched(probs, x64=False, use_pallas=True, interpret=True)
+    for i, p in enumerate(probs):
+        got = ba32.allocation(i)
+        got.validate(p)
+        s64 = int(ba64.tau[i].max() - ba64.tau[i].min())
+        s32 = int(ba32.tau[i, : p.num_learners].max() - ba32.tau[i, : p.num_learners].min())
+        assert abs(s32 - s64) <= 1
+
+
+# ---------------------------------------------------------------------------
+# PGD routed through the BatchedProblems struct
+# ---------------------------------------------------------------------------
+
+def test_pgd_batched_struct_routing():
+    probs = [make_problem(k=6, T=15.0, d=3000, seed=s) for s in range(4)]
+    bp = BatchedProblems.from_problems(probs)
+    tau, d = solve_pgd_batched(bp, steps=300)
+    assert tau.shape == (4, 6) and d.shape == (4, 6)
+    np.testing.assert_allclose(np.asarray(d.sum(1)), bp.total.astype(float), rtol=1e-3)
+    assert np.all(np.asarray(d) >= bp.d_lo - 1e-3)
+    assert np.all(np.asarray(d) <= bp.d_hi + 1e-3)
+    # mixed-K batches are rejected, not silently mis-solved
+    mixed = BatchedProblems.from_problems([probs[0], make_problem(k=4, seed=9)])
+    with pytest.raises(ValueError):
+        solve_pgd_batched(mixed)
+
+
+# ---------------------------------------------------------------------------
+# fused scan-over-cycles orchestrator vs eager loop
+# ---------------------------------------------------------------------------
+
+def test_fused_orchestrator_matches_eager_history():
+    from repro.fed.simulation import run_experiment
+
+    eager = run_experiment(k=4, T=15.0, cycles=3, total_samples=1200, seed=3)
+    fused = run_experiment(k=4, T=15.0, cycles=3, total_samples=1200, seed=3,
+                           fused=True)
+    he, hf = eager["history"], fused["history"]
+    assert len(he) == len(hf) == 3
+    for re_, rf in zip(he, hf):
+        np.testing.assert_array_equal(re_["tau"], rf["tau"])
+        np.testing.assert_array_equal(re_["d"], rf["d"])
+        assert re_["max_staleness"] == rf["max_staleness"]
+        assert re_["cycle"] == rf["cycle"] and re_["elapsed_s"] == rf["elapsed_s"]
+    np.testing.assert_allclose(
+        [h["accuracy"] for h in he], [h["accuracy"] for h in hf], atol=1e-4
+    )
+
+
+def test_fused_orchestrator_rejects_reallocate():
+    from repro.data.pipeline import synthetic_mnist
+    from repro.fed.orchestrator import MELConfig, Orchestrator
+    from repro.models import mlp
+
+    train, _ = synthetic_mnist(2000, n_test=10, seed=0)
+    prob = make_problem(k=4, T=15.0, d=1000)
+    mel = MELConfig(T=15.0, total_samples=1000)
+    orch = Orchestrator(mel, prob, mlp.loss, mlp.init(jax.random.key(0)))
+    with pytest.raises(ValueError):
+        orch.run(train, 2, fused=True, reallocate=True)
+
+
+def test_batched_sweep_matches_eager_sweep():
+    from repro.fed.simulation import staleness_sweep
+
+    kw = dict(schemes=("kkt_sai", "eta"), seed=0, total_samples=4000)
+    assert staleness_sweep([5, 8], 7.5, **kw) == staleness_sweep(
+        [5, 8], 7.5, use_batched=False, **kw
+    )

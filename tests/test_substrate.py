@@ -3,7 +3,7 @@ data pipeline determinism, time-model algebra."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st  # hypothesis, or fixed-seed fallback
 
 import jax
 import jax.numpy as jnp
@@ -234,7 +234,7 @@ def test_local_train_lowers_sharded_over_learners():
     import functools
 
     fn = functools.partial(local_train, max_tau=4, loss_fn=mlp.loss)
-    with jax.set_mesh(mesh):
+    with mesh:  # Mesh is the context manager (jax.set_mesh is newer-jax only)
         lowered = jax.jit(
             fn,
             in_shardings=(None, lsh, lsh, lsh, lsh, None),
