@@ -1,9 +1,14 @@
 """Allocation-engine benchmark: problems/sec for the per-problem Python
 KKT+SAI solver vs the batched engine, plus eager-vs-fused orchestrator
-cycle wall-time. Emits machine-readable ``BENCH_alloc.json`` (the perf
-trajectory seed for the fleet-scale scheduling path).
+cycle wall-time and the per-cycle reallocation scenario (time-varying
+capacities: fleet x cycle re-solves batched vs the Python loop, and the
+in-scan reallocating orchestrator vs its eager twin). Emits
+machine-readable ``BENCH_alloc.json`` (the perf trajectory seed for the
+fleet-scale scheduling path); ``main`` and ``realloc_main`` merge their
+sections into the same file.
 
-  PYTHONPATH=src python -m benchmarks.run --only alloc
+  PYTHONPATH=src python -m benchmarks.run --only alloc     # alloc + realloc
+  PYTHONPATH=src python -m benchmarks.run --only realloc   # realloc rows only
 """
 
 from __future__ import annotations
@@ -17,6 +22,7 @@ import numpy as np
 from repro.core import (
     AllocationProblem,
     BatchedProblems,
+    CapacityDrift,
     TimeModel,
     indoor_80211_profile,
     mnist_dnn_cost,
@@ -25,6 +31,15 @@ from repro.core import (
 )
 
 OUT_PATH = pathlib.Path("BENCH_alloc.json")
+
+
+def _merge_out(section: str, payload) -> None:
+    data = {"bench": "alloc", "device": "cpu"}
+    if OUT_PATH.exists():
+        data.update(json.loads(OUT_PATH.read_text()))
+    data[section] = payload
+    OUT_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"# wrote {OUT_PATH} [{section}]")
 
 
 def _make_problem(k: int, seed: int, total: int = 6000) -> AllocationProblem:
@@ -117,6 +132,88 @@ def bench_orchestrator(*, k: int = 6, t_cycle: float = 5.0, cycles: int = 8,
     }
 
 
+def bench_realloc_alloc(n_fleets: int, k: int, cycles: int, *,
+                        loop_sample: int, total: int = 6000) -> dict:
+    """Adaptive re-solve throughput under drift: every (fleet, cycle)
+    capacity state is its own KKT problem — the Python loop re-solves them
+    one by one, the batched engine pads all n_fleets * cycles states into
+    one struct and solves them as ONE XLA call."""
+    base = [_make_problem(k, seed, total=total) for seed in range(n_fleets)]
+    drift = CapacityDrift(seed=0)
+    probs = []
+    for p in base:
+        c2s, c1s, c0s = drift.coefficient_path(p.time_model, cycles)
+        for c in range(cycles):
+            probs.append(AllocationProblem(
+                time_model=TimeModel(c2=c2s[c], c1=c1s[c], c0=c0s[c]),
+                T=p.T, total_samples=p.total_samples,
+                d_lower=p.d_lower, d_upper=p.d_upper,
+            ))
+    bp = BatchedProblems.from_problems(probs)
+    b = len(probs)
+
+    n_loop = min(loop_sample, b)
+    t0 = time.time()
+    for p in probs[:n_loop]:
+        solve_kkt_sai(p)
+    loop_s = (time.time() - t0) / n_loop * b
+
+    solve_kkt_batched(bp)            # compile + warmup
+    t0 = time.time()
+    ba = solve_kkt_batched(bp)
+    batched_s = time.time() - t0
+    assert bool(ba.feasible.all())
+
+    return {
+        "fleets": n_fleets,
+        "K": k,
+        "cycles": cycles,
+        "resolves": b,
+        "python_loop_s": round(loop_s, 4),
+        "python_loop_sampled": n_loop,
+        "batched_s": round(batched_s, 5),
+        "resolves_per_sec_loop": round(b / loop_s, 1),
+        "resolves_per_sec_batched": round(b / batched_s, 1),
+        "speedup": round(loop_s / batched_s, 1),
+    }
+
+
+def bench_realloc_orchestrator(*, k: int = 6, t_cycle: float = 5.0,
+                               cycles: int = 8, total: int = 900) -> dict:
+    """Wall-time of a full reallocating run: eager (one host round-trip +
+    one host re-solve per cycle) vs fused (per-cycle KKT re-solve traced
+    INSIDE the scan — a single XLA program for the whole run).
+
+    Caveats for reading the CPU number: the warmup run hides that the eager
+    path re-jits local_train for every distinct per-cycle max(tau) a fresh
+    drift path produces, and CPU is compute-bound (ROADMAP): the fused
+    variant pays d_upper-wide shard padding where eager pads to the cycle's
+    actual max d. The in-scan path's win — zero per-cycle host staging and
+    zero recompiles — shows up on accelerator runtimes."""
+    from repro.fed.simulation import run_experiment
+
+    drift = CapacityDrift(seed=0)
+    kw = dict(k=k, T=t_cycle, cycles=cycles, total_samples=total, seed=0,
+              reallocate=True, drift=drift)
+    run_experiment(**kw, fused=True)     # compile + warmup both paths
+    run_experiment(**kw)
+    t0 = time.time()
+    run_experiment(**kw)
+    eager_s = time.time() - t0
+    t0 = time.time()
+    run_experiment(**kw, fused=True)
+    fused_s = time.time() - t0
+    return {
+        "K": k,
+        "cycles": cycles,
+        "eager_s": round(eager_s, 3),
+        "fused_s": round(fused_s, 3),
+        "eager_cycle_ms": round(eager_s / cycles * 1e3, 1),
+        "fused_cycle_ms": round(fused_s / cycles * 1e3, 1),
+        "speedup": round(eager_s / fused_s, 2),
+    }
+
+
 def main(quick: bool = False) -> None:
     shapes = [(64, 10), (1024, 10)] if quick else [(64, 10), (64, 50), (1024, 10), (1024, 50)]
     loop_sample = 128 if quick else 1024
@@ -133,14 +230,30 @@ def main(quick: bool = False) -> None:
     print(f"orchestrator eager {orch['eager_cycle_ms']}ms/cycle vs "
           f"fused {orch['fused_cycle_ms']}ms/cycle ({orch['speedup']}x)")
 
-    OUT_PATH.write_text(json.dumps({
-        "bench": "alloc",
-        "device": "cpu",
-        "alloc": alloc_rows,
-        "orchestrator": orch,
-    }, indent=2) + "\n")
-    print(f"# wrote {OUT_PATH}")
+    _merge_out("alloc", alloc_rows)
+    _merge_out("orchestrator", orch)
+
+
+def realloc_main(quick: bool = False) -> None:
+    shapes = [(16, 10, 8)] if quick else [(16, 10, 8), (64, 10, 16), (64, 50, 16)]
+    loop_sample = 64 if quick else 512
+
+    print("fleets,K,cycles,resolves_per_s_loop,resolves_per_s_batched,speedup")
+    rows = []
+    for f, k, c in shapes:
+        row = bench_realloc_alloc(f, k, c, loop_sample=loop_sample)
+        rows.append(row)
+        print(f"{row['fleets']},{row['K']},{row['cycles']},"
+              f"{row['resolves_per_sec_loop']},"
+              f"{row['resolves_per_sec_batched']},{row['speedup']}")
+
+    orch = bench_realloc_orchestrator(cycles=4 if quick else 8)
+    print(f"realloc orchestrator eager {orch['eager_cycle_ms']}ms/cycle vs "
+          f"in-scan {orch['fused_cycle_ms']}ms/cycle ({orch['speedup']}x)")
+
+    _merge_out("realloc", {"alloc": rows, "orchestrator": orch})
 
 
 if __name__ == "__main__":
     main()
+    realloc_main()

@@ -7,6 +7,8 @@ Sections:
   fig3      accuracy vs global cycles (paper Fig. 3)
   solvers   analytic SAI vs numerical solvers (Sec. IV/V)
   alloc     batched allocation engine vs per-problem Python loop (BENCH_alloc.json)
+  realloc   per-cycle reallocation under drift: batched re-solves + the
+            in-scan reallocating orchestrator (merges into BENCH_alloc.json)
   kernels   hot-spot micro-benchmarks
   roofline  per (arch x shape x mesh) roofline terms from dry-run artifacts
 """
@@ -30,6 +32,7 @@ SECTIONS = [
     ("fig2_staleness_vs_k", staleness_vs_k.main),
     ("solver_table", solver_table.main),
     ("alloc_bench", alloc_bench.main),
+    ("realloc_bench", alloc_bench.realloc_main),
     ("kernel_bench", kernel_bench.main),
     ("roofline_report", roofline_report.main),
     ("fig3_accuracy_vs_cycles", accuracy_vs_cycles.main),

@@ -6,10 +6,12 @@ from repro.core.aggregation import aggregate, fedavg_weights, staleness_weights
 from repro.core.baselines import solve_eta, solve_synchronous
 from repro.core.complexity import ModelCost, mlp_cost, mnist_dnn_cost, transformer_cost
 from repro.core.solver_batched import (
+    TRACED_POLICIES,
     BatchedAllocation,
     BatchedProblems,
     batched_avg_staleness,
     batched_max_staleness,
+    batched_policy,
     batched_summary,
     solve_eta_batched,
     solve_kkt_batched,
@@ -19,6 +21,7 @@ from repro.core.solver_kkt import solve_relaxed, suggest_and_improve
 from repro.core.solver_numeric import solve_pgd_batched, solve_pgd_jax, solve_slsqp
 from repro.core.staleness import avg_staleness, max_staleness
 from repro.core.time_model import (
+    CapacityDrift,
     ChannelParams,
     LearnerProfile,
     TimeModel,
@@ -29,13 +32,16 @@ from repro.core.time_model import (
 __all__ = [
     "Allocation",
     "AllocationProblem",
+    "TRACED_POLICIES",
     "BatchedAllocation",
     "BatchedProblems",
     "batched_avg_staleness",
     "batched_max_staleness",
+    "batched_policy",
     "batched_summary",
     "solve_eta_batched",
     "solve_kkt_batched",
+    "CapacityDrift",
     "ChannelParams",
     "LearnerProfile",
     "ModelCost",

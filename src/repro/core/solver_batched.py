@@ -52,6 +52,8 @@ from repro.core.time_model import TimeModel
 __all__ = [
     "BatchedProblems",
     "BatchedAllocation",
+    "TRACED_POLICIES",
+    "batched_policy",
     "solve_kkt_batched",
     "solve_eta_batched",
     "batched_max_staleness",
@@ -73,6 +75,20 @@ class BatchedProblems:
     ``d_lo``/``d_hi`` are per-learner so heterogeneous fleets and padding
     share one code path; for real problems every valid learner of fleet b
     carries that problem's scalar (d_lower, d_upper).
+
+    Mask semantics for padded slots (``valid[b, k] == False`` — learner k
+    does not exist in fleet b): every solver in this module and
+    ``solver_numeric.solve_pgd_batched`` honors the same contract —
+
+      * padded slots carry ``d_lo = d_hi = 0`` so any bound clip pins them
+        to zero work; ``from_problems`` builds them that way and hand-built
+        structs must too (a padded slot with a non-zero box is undefined);
+      * coefficients of padded slots are ignored (``from_problems`` writes
+        c2 = c1 = 1, c0 = 0 so divides stay finite);
+      * solver outputs carry ``tau = d = 0`` in padded slots, and padded
+        slots never enter staleness objectives/metrics or the sum
+        constraint (sum_k d_k = total ranges over valid slots only, which
+        the zero box enforces).
     """
 
     c2: np.ndarray        # (B, K)
@@ -377,17 +393,11 @@ def _sai_one(d0, c2, c1, c0, T, lo_i, hi_i, valid, *, max_rounds):
     return tau, d, rounds
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("tol", "max_iter", "max_rounds", "use_pallas", "interpret"),
-)
-def _solve_kkt_batched_impl(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *,
-                            tol, max_iter, max_rounds, use_pallas, interpret):
-    total_f = total_i.astype(c2.dtype)
-    feasible, tau_star, tau_r, d_r, _ = _relaxed_batched(
-        c2, c1, c0, T, total_f, d_lo, d_hi,
-        tol=tol, max_iter=max_iter, use_pallas=use_pallas, interpret=interpret,
-    )
+def _integerize_and_repair(d_r, feasible, c2, c1, c0, T, total_i, d_lo, d_hi,
+                           valid, *, max_rounds):
+    """Shared integer tail of every batched policy: largest-remainder
+    rounding to the exact sum, then greedy SAI repair (both vmapped bounded
+    while_loops). Returns (tau, d, feasible, sai_rounds)."""
     lo_i = jnp.round(d_lo).astype(total_i.dtype)
     hi_i = jnp.round(d_hi).astype(total_i.dtype)
     # neutralize infeasible rows so the integer repair loops terminate fast
@@ -402,9 +412,39 @@ def _solve_kkt_batched_impl(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *,
     tau, d, rounds = jax.vmap(
         functools.partial(_sai_one, max_rounds=max_rounds)
     )(d_int, c2, c1, c0, T, lo_i, hi_i, valid)
+    return tau, d, feasible, rounds
+
+
+def _kkt_batched_core(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *,
+                      tol, max_iter, max_rounds, use_pallas, interpret):
+    """Traced KKT water-filling + SAI pipeline — callable from inside other
+    traced programs (the orchestrator's in-scan reallocation) as well as
+    from the jitted host entry point."""
+    total_f = total_i.astype(c2.dtype)
+    feasible, tau_star, tau_r, d_r, _ = _relaxed_batched(
+        c2, c1, c0, T, total_f, d_lo, d_hi,
+        tol=tol, max_iter=max_iter, use_pallas=use_pallas, interpret=interpret,
+    )
+    tau, d, feasible, rounds = _integerize_and_repair(
+        d_r, feasible, c2, c1, c0, T, total_i, d_lo, d_hi, valid,
+        max_rounds=max_rounds,
+    )
     return dict(
         tau=tau, d=d, feasible=feasible,
         relaxed_tau=tau_r, relaxed_d=d_r, tau_star=tau_star, sai_rounds=rounds,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tol", "max_iter", "max_rounds", "use_pallas", "interpret"),
+)
+def _solve_kkt_batched_impl(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *,
+                            tol, max_iter, max_rounds, use_pallas, interpret):
+    return _kkt_batched_core(
+        c2, c1, c0, T, total_i, d_lo, d_hi, valid,
+        tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+        use_pallas=use_pallas, interpret=interpret,
     )
 
 
@@ -499,6 +539,91 @@ def _eta_one(total_i, lo_i, hi_i, valid, c2, c1, c0, T):
 @jax.jit
 def _solve_eta_batched_impl(c2, c1, c0, T, total_i, lo_i, hi_i, valid):
     return jax.vmap(_eta_one)(total_i, lo_i, hi_i, valid, c2, c1, c0, T)
+
+
+# ---------------------------------------------------------------------------
+# traced allocation policies (the orchestrator's in-scan reallocation API)
+# ---------------------------------------------------------------------------
+
+def _kkt_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *, tol, max_iter,
+                max_rounds, use_pallas, interpret):
+    out = _kkt_batched_core(
+        c2, c1, c0, T, total_i, d_lo, d_hi, valid,
+        tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    return out["tau"], out["d"], out["feasible"]
+
+
+def _eta_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid):
+    lo_i = jnp.round(d_lo).astype(total_i.dtype)
+    hi_i = jnp.round(d_hi).astype(total_i.dtype)
+    tau, d, ok = jax.vmap(_eta_one)(total_i, lo_i, hi_i, valid, c2, c1, c0, T)
+    return tau, d, ok
+
+
+def _pgd_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *, steps,
+                max_rounds):
+    from repro.core import solver_numeric
+    from repro.kernels import ops
+
+    total_f = total_i.astype(c2.dtype)
+    feasible = ops.waterfill_residual(
+        jnp.zeros_like(T), c2, c1, c0, T, d_lo, d_hi, total_f
+    ) >= -1e-9
+    n_valid = jnp.maximum(valid.sum(axis=-1, keepdims=True), 1)
+    d0 = jnp.clip(
+        jnp.where(valid, total_f[:, None] / n_valid, 0.0), d_lo, d_hi
+    )
+    tau_r, d_r = jax.vmap(
+        lambda d0_, c2_, c1_, c0_, T_, lo_, hi_, tot_, v_:
+            solver_numeric._pgd_run(d0_, c2_, c1_, c0_, T_, lo_, hi_, tot_,
+                                    steps, v_)
+    )(d0, c2, c1, c0, T, d_lo, d_hi, total_f, valid)
+    tau, d, feasible, _ = _integerize_and_repair(
+        d_r, feasible, c2, c1, c0, T, total_i, d_lo, d_hi, valid,
+        max_rounds=max_rounds,
+    )
+    return tau, d, feasible
+
+
+#: schemes with a traced in-scan policy (see ``batched_policy``)
+TRACED_POLICIES = ("kkt_sai", "eta", "pgd")
+
+
+@functools.lru_cache(maxsize=None)
+def batched_policy(
+    name: str,
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+    max_rounds: int = 10_000,
+    use_pallas: bool = False,
+    interpret: bool = False,
+    pgd_steps: int = 600,
+):
+    """A traced allocation policy: ``fn(c2, c1, c0, T, total_i, d_lo, d_hi,
+    valid) -> (tau, d, feasible)`` over (B, K) batches, safe to call inside
+    ``jit``/``scan`` (it is the orchestrator's per-cycle in-scan
+    reallocation hook). ``name`` is one of ``kkt_sai`` (paper pipeline),
+    ``eta`` (equal-task baseline) or ``pgd`` (relaxed projected-gradient +
+    the same integerize/SAI tail). The returned callable is cached per
+    option set so jit caches keyed on it stay warm."""
+    if name == "kkt_sai":
+        return functools.partial(
+            _kkt_policy, tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+    if name == "eta":
+        return _eta_policy
+    if name == "pgd":
+        return functools.partial(
+            _pgd_policy, steps=pgd_steps, max_rounds=max_rounds,
+        )
+    raise ValueError(
+        f"no batched/traced policy for scheme {name!r}; "
+        f"choose from {' | '.join(TRACED_POLICIES)}"
+    )
 
 
 def solve_eta_batched(problems, *, x64: bool = True) -> BatchedAllocation:

@@ -115,7 +115,9 @@ def solve_slsqp(prob: AllocationProblem, *, max_iter: int = 300) -> Allocation:
 
 def _project_sum_box(d, d_lo, d_hi, total, iters: int = 16):
     """Alternating projection onto {sum d = total} intersect [d_lo, d_hi]^K
-    (Dykstra-free variant; converges because both sets are closed convex)."""
+    (Dykstra-free variant; converges because both sets are closed convex).
+    ``d_lo``/``d_hi`` may be scalars or per-learner arrays; padded learner
+    slots (d_lo == d_hi == 0) are pinned at zero and never receive mass."""
 
     def body(d, _):
         gap = total - d.sum()
@@ -127,21 +129,36 @@ def _project_sum_box(d, d_lo, d_hi, total, iters: int = 16):
     return d
 
 
-def _staleness_loss(d, c2, c1, c0, T, smooth):
-    tau = jnp.maximum((T - c0 - c1 * d) / (c2 * d), 0.0)
-    smax = smooth * jax.nn.logsumexp(tau / smooth)
-    smin = -smooth * jax.nn.logsumexp(-tau / smooth)
+def _tau_of_d_masked(d, c2, c1, c0, T, valid):
+    """tau_k(d_k) with padded / zero-d slots pinned at 0 (NaN-safe grads)."""
+    d_safe = jnp.where(valid & (d > 0), d, 1.0)
+    tau = jnp.maximum((T - c0 - c1 * d) / (c2 * d_safe), 0.0)
+    return jnp.where(valid & (d > 0), tau, 0.0)
+
+
+def _staleness_loss(d, c2, c1, c0, T, smooth, valid):
+    tau = _tau_of_d_masked(d, c2, c1, c0, T, valid)
+    masked = jnp.where(valid, tau, -jnp.inf)
+    smax = smooth * jax.nn.logsumexp(masked / smooth)
+    smin = -smooth * jax.nn.logsumexp(jnp.where(valid, -tau, -jnp.inf) / smooth)
     return smax - smin
 
 
 @functools.partial(jax.jit, static_argnames=("steps",))
-def _pgd_run(d0, c2, c1, c0, T, d_lo, d_hi, total, steps: int):
-    """Projected gradient descent in d-space with annealed smoothing."""
+def _pgd_run(d0, c2, c1, c0, T, d_lo, d_hi, total, steps: int, valid=None):
+    """Projected gradient descent in d-space with annealed smoothing.
+
+    ``d_lo``/``d_hi`` may be scalars or per-learner (K,) arrays; ``valid``
+    is an optional (K,) bool mask — padded slots (d_lo == d_hi == 0,
+    valid == False) stay at zero, contribute no gradient and are excluded
+    from the smoothed max/min staleness objective, so padded mixed-K
+    batches solve exactly like their unpadded counterparts."""
+    v = jnp.ones(d0.shape, bool) if valid is None else valid
 
     def step(d, i):
         frac = i / steps
         smooth = 10.0 ** (0.0 - 2.0 * frac)            # 1.0 -> 0.01
-        g = jax.grad(_staleness_loss)(d, c2, c1, c0, T, smooth)
+        g = jax.grad(_staleness_loss)(d, c2, c1, c0, T, smooth, v)
         gnorm = jnp.linalg.norm(g) + 1e-12
         lr = 0.05 * (d_hi - d_lo) * (1.0 - 0.9 * frac)
         d = d - lr * g / gnorm
@@ -150,7 +167,7 @@ def _pgd_run(d0, c2, c1, c0, T, d_lo, d_hi, total, steps: int):
 
     d, _ = jax.lax.scan(step, d0, jnp.arange(steps))
     d = _project_sum_box(d, d_lo, d_hi, total, iters=64)
-    tau = jnp.maximum((T - c0 - c1 * d) / (c2 * d), 0.0)
+    tau = _tau_of_d_masked(d, c2, c1, c0, T, v)
     return tau, d
 
 
@@ -160,41 +177,40 @@ def _pgd_run(d0, c2, c1, c0, T, d_lo, d_hi, total, steps: int):
 @functools.lru_cache(maxsize=None)
 def _pgd_batch_fn(steps: int):
     return jax.vmap(
-        lambda d0, c2, c1, c0, T, d_lo, d_hi, total: _pgd_run(
-            d0, c2, c1, c0, T, d_lo, d_hi, total, steps
+        lambda d0, c2, c1, c0, T, d_lo, d_hi, total, valid: _pgd_run(
+            d0, c2, c1, c0, T, d_lo, d_hi, total, steps, valid
         ),
-        in_axes=(0, 0, 0, 0, 0, 0, 0, 0),
+        in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0),
     )
 
 
-def pgd_relaxed_batch(d0, c2, c1, c0, T, d_lo, d_hi, total, *, steps: int = 600):
+def pgd_relaxed_batch(d0, c2, c1, c0, T, d_lo, d_hi, total, *, steps: int = 600,
+                      valid=None):
     """Batched relaxed PGD: all args have a leading problem axis B; ``steps``
-    is a static compile-time argument."""
-    return _pgd_batch_fn(steps)(d0, c2, c1, c0, T, d_lo, d_hi, total)
+    is a static compile-time argument. ``valid`` is an optional (B, K) bool
+    mask for padded mixed-K batches (defaults to all-valid)."""
+    if valid is None:
+        valid = jnp.ones(jnp.shape(d0), bool)
+    return _pgd_batch_fn(steps)(d0, c2, c1, c0, T, d_lo, d_hi, total, valid)
 
 
 def solve_pgd_batched(bp: BatchedProblems, *, steps: int = 600):
     """Relaxed PGD over a ``BatchedProblems`` struct — the same (B, K)
-    layout the batched KKT engine consumes. Requires unpadded batches with
-    per-problem-uniform bounds (PGD has no per-learner box/mask support).
-    Returns continuous (tau, d) of shape (B, K)."""
-    if not np.all(bp.valid):
-        raise ValueError("solve_pgd_batched requires unpadded batches "
-                         "(equal fleet sizes); use solve_kkt_batched for mixed K")
-    if np.any(bp.d_lo != bp.d_lo[:, :1]) or np.any(bp.d_hi != bp.d_hi[:, :1]):
-        raise ValueError("solve_pgd_batched requires per-problem-uniform "
-                         "d_lo/d_hi; use solve_kkt_batched for per-learner bounds")
-    b, k = bp.c2.shape
-    d_lo = bp.d_lo[:, 0].astype(np.float32)
-    d_hi = bp.d_hi[:, 0].astype(np.float32)
-    total = bp.total.astype(np.float32)
-    d0 = np.clip((total / k)[:, None].repeat(k, axis=1), d_lo[:, None], d_hi[:, None])
+    layout the batched KKT engine consumes, including padded mixed-K
+    batches: per-learner ``d_lo``/``d_hi`` bound boxes are honored and the
+    ``valid`` mask keeps padded slots (d_lo == d_hi == 0) at exactly zero
+    work, outside the staleness objective. Returns continuous (tau, d) of
+    shape (B, K); padded entries are 0."""
+    n_valid = np.maximum(bp.valid.sum(axis=1, keepdims=True), 1)
+    d0 = np.where(bp.valid, bp.total[:, None] / n_valid, 0.0)
+    d0 = np.clip(d0, bp.d_lo, bp.d_hi).astype(np.float32)
     return pgd_relaxed_batch(
-        jnp.asarray(d0, jnp.float32),
+        jnp.asarray(d0),
         jnp.asarray(bp.c2, jnp.float32), jnp.asarray(bp.c1, jnp.float32),
         jnp.asarray(bp.c0, jnp.float32), jnp.asarray(bp.T, jnp.float32),
-        jnp.asarray(d_lo), jnp.asarray(d_hi), jnp.asarray(total),
-        steps=steps,
+        jnp.asarray(bp.d_lo, jnp.float32), jnp.asarray(bp.d_hi, jnp.float32),
+        jnp.asarray(bp.total, jnp.float32),
+        steps=steps, valid=jnp.asarray(bp.valid, bool),
     )
 
 

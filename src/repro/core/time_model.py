@@ -30,6 +30,7 @@ from typing import Sequence
 import numpy as np
 
 __all__ = [
+    "CapacityDrift",
     "ChannelParams",
     "LearnerProfile",
     "TimeModel",
@@ -136,6 +137,71 @@ class TimeModel:
             t = np.floor((T - self.c0 - self.c1 * d) / (self.c2 * d))
         t = np.where(d > 0, t, 0.0)
         return np.maximum(t, 0.0).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Time-varying capacities (per-cycle drift)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CapacityDrift:
+    """Seeded, jit-compatible per-cycle drift of a fleet's capacities.
+
+    Two independent multiplicative processes, re-drawn each global cycle
+    (block model: capacities are constant within a cycle):
+
+      * compute drift — effective clock f_k jitters by a uniform factor in
+        ``[1 - clock_jitter, 1 + clock_jitter]`` (thermal throttling,
+        co-tenant load), scaling C2_k by its inverse;
+      * channel fading — the achievable rate R_k is multiplied by a clipped
+        lognormal shadowing factor ``10^(X/10)``, X ~ N(0, fading_sigma_db)
+        clipped to ±fading_clip_db (log-distance shadowing re-drawn per
+        cycle), scaling C1_k and C0_k by its inverse.
+
+    ``factors_at`` uses ``jax.random.fold_in(key(seed), cycle)`` so it is
+    traceable on a traced cycle index (usable inside ``lax.scan``) and the
+    whole path is reproducible from ``seed`` alone; draws are generated in
+    float32 regardless of the x64 flag so host-precomputed paths and traced
+    in-scan consumers see bit-identical factors.
+    """
+
+    clock_jitter: float = 0.1
+    fading_sigma_db: float = 2.0
+    fading_clip_db: float = 6.0
+    seed: int = 0
+
+    def factors_at(self, cycle, k: int):
+        """(clock_factor, rate_factor), each (K,) float32, for one cycle."""
+        import jax
+        import jax.numpy as jnp
+
+        key = jax.random.fold_in(jax.random.key(self.seed), cycle)
+        kc, kf = jax.random.split(key)
+        clock = 1.0 + self.clock_jitter * (
+            2.0 * jax.random.uniform(kc, (k,), jnp.float32) - 1.0
+        )
+        db = jnp.clip(
+            self.fading_sigma_db * jax.random.normal(kf, (k,), jnp.float32),
+            -self.fading_clip_db, self.fading_clip_db,
+        )
+        rate = jnp.power(jnp.float32(10.0), db / 10.0)
+        return clock, rate
+
+    def coefficient_path(
+        self, tm: "TimeModel", cycles: int
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Drifted (c2, c1, c0) float64 numpy arrays of shape (C, K); row c
+        is the fleet's true capacity during global cycle c."""
+        import jax
+        import jax.numpy as jnp
+
+        k = tm.num_learners
+        clock, rate = jax.vmap(lambda c: self.factors_at(c, k))(
+            jnp.arange(cycles)
+        )
+        clock = np.asarray(clock, np.float64)
+        rate = np.asarray(rate, np.float64)
+        return tm.c2[None] / clock, tm.c1[None] / rate, tm.c0[None] / rate
 
 
 # ---------------------------------------------------------------------------

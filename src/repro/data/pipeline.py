@@ -89,10 +89,16 @@ class FederatedPartitioner:
         self.dataset = dataset
         self.rng = np.random.default_rng(seed)
 
+    def draw_indices(self, total: int) -> np.ndarray:
+        """One cycle's sample indices (total,) — rng consumption depends only
+        on ``total``, so any split of the same total (``draw``) and a flat
+        pre-staged draw (the fused reallocation path, which splits by traced
+        d inside the scan) see identical samples."""
+        return self.rng.choice(self.dataset.size, size=int(total), replace=False)
+
     def draw(self, d: np.ndarray) -> list[Dataset]:
         """d: (K,) integer batch sizes, sum <= dataset size. Disjoint shards."""
-        total = int(np.sum(d))
-        idx = self.rng.choice(self.dataset.size, size=total, replace=False)
+        idx = self.draw_indices(int(np.sum(d)))
         out, off = [], 0
         for dk in d:
             out.append(self.dataset.subset(idx[off : off + int(dk)]))

@@ -25,8 +25,21 @@ Two execution paths:
     over global cycles with the carried params buffer donated. The
     aggregation contraction goes through ``kernels.ops.fed_agg``
     (Pallas on TPU via ``use_pallas=True``). Trades C× shard memory for
-    zero per-cycle host staging; allocation is fixed over the scan
-    (reallocate is an eager-path feature).
+    zero per-cycle host staging.
+
+Adaptive in-scan reallocation: with ``reallocate=True`` (both paths) and a
+``CapacityDrift`` model, the allocation program is re-solved EVERY cycle
+on that cycle's drifted (c2, c1, c0) capacities. On the fused path the
+re-solve happens *inside* the scan — ``core.solver_batched.batched_policy``
+(KKT water-filling + SAI, equal-task eta, or masked PGD, per
+``MELConfig.scheme``) runs on the traced (1, K) capacity state each cycle,
+so a fleet-scale run with per-cycle reallocation is still ONE XLA program
+with zero per-cycle host round-trips. Shards are pre-drawn flat (the
+partitioner's rng consumption depends only on the constant per-cycle
+total) and split by the traced d inside the scan, so for the same seed the
+tau/d history and the per-learner shard contents match the eager
+reallocation path exactly (allocation math runs in f64 under
+``enable_x64``; training stays f32).
 """
 
 from __future__ import annotations
@@ -39,11 +52,15 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64
 
 from repro.core import (
     Allocation,
     AllocationProblem,
+    CapacityDrift,
     aggregate,
+    batched_policy,
+    TRACED_POLICIES,
     fedavg_weights,
     solve_eta,
     solve_kkt_sai,
@@ -150,6 +167,109 @@ def _fused_cycles(params, xs, ys, ms, tau, weights, lr, eval_x, eval_y, *,
     return jax.lax.scan(one_cycle, params, (xs, ys, ms))
 
 
+def _local_train_dynamic(params, x, y, mask, tau, lr, *, loss_fn):
+    """Traced-tau twin of ``local_train``: a ``while_loop`` to the TRACED
+    fleet-max tau (so a reallocating scan only pays for the updates each
+    cycle actually runs, not a static worst-case bound), with per-learner
+    masked updates. The per-step select matches ``local_train``'s vmapped
+    ``lax.cond`` numerics exactly, so both produce identical params."""
+    k = x.shape[0]
+    stacked = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p, (k,) + p.shape), params
+    )
+    tau_max = jnp.max(tau)
+
+    def one_step(i, pk, xk, yk, mk, tau_k):
+        batch = {"x": xk, "y": yk, "mask": mk}
+        g = jax.grad(loss_fn)(pk, batch)
+        return jax.tree_util.tree_map(
+            lambda p, gi: jnp.where(i < tau_k, p - lr * gi, p), pk, g
+        )
+
+    def body(state):
+        p, i = state
+        p = jax.vmap(functools.partial(one_step, i))(p, x, y, mask, tau)
+        return p, i + 1
+
+    p, _ = jax.lax.while_loop(
+        lambda s: s[1] < tau_max, body, (stacked, jnp.zeros((), tau.dtype))
+    )
+    return p
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_policy(scheme: str):
+    """One jitted wrapper per scheme so per-cycle eager re-solves hit the
+    same compilation cache (the fused path inlines the identical traced
+    policy inside its scan)."""
+    return jax.jit(batched_policy(scheme))
+
+
+def _weights_traced(tau, d, *, aggregation: str, gamma):
+    """Traced twin of staleness_weights / fedavg_weights (f64 in, f32 out
+    matches the eager numpy arithmetic followed by aggregate's cast)."""
+    tau_f = tau.astype(jnp.float64)
+    d_f = d.astype(jnp.float64)
+    if aggregation == "staleness":
+        w = d_f / (1.0 + gamma * (jnp.max(tau_f) - tau_f))
+    else:
+        w = d_f
+    return (w / w.sum()).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_cap", "loss_fn", "eval_fn", "policy",
+                     "aggregation", "use_pallas", "interpret"),
+    donate_argnums=(0,),
+)
+def _fused_realloc_cycles(params, xs, ys, c2s, c1s, c0s, T1, total1, lo1, hi1,
+                          valid1, gamma, lr, eval_x, eval_y, *,
+                          d_cap: int, loss_fn, eval_fn, policy,
+                          aggregation: str, use_pallas: bool, interpret: bool):
+    """One XLA program for C global cycles WITH per-cycle reallocation:
+    scan(policy-solve on traced capacities -> shard split by traced d ->
+    dynamic local_train -> fed_agg). xs: (C, total, F) flat per-cycle
+    sample tensors; c2s/c1s/c0s: (C, K) f64 drifted capacity rows;
+    T1/total1: (1,); lo1/hi1/valid1: (1, K). Must run under ``enable_x64``
+    so the allocation math stays f64 while training stays f32."""
+    from repro.kernels import ops
+
+    total = xs.shape[1]
+
+    def one_cycle(p, inp):
+        x_flat, y_flat, c2, c1, c0 = inp
+        tau_b, d_b, feas_b = policy(
+            c2[None], c1[None], c0[None], T1, total1, lo1, hi1, valid1
+        )
+        tau, d, feas = tau_b[0], d_b[0], feas_b[0]
+        w = _weights_traced(tau, d, aggregation=aggregation, gamma=gamma)
+
+        # split the flat draw into per-learner shards by the traced d —
+        # identical contents to the eager path's contiguous slicing
+        off = jnp.cumsum(d) - d
+        j = jnp.arange(d_cap, dtype=d.dtype)
+        gidx = off[:, None] + j[None, :]
+        m = j[None, :] < d[:, None]
+        safe = jnp.clip(gidx, 0, total - 1)
+        x = jnp.take(x_flat, safe, axis=0)          # (K, d_cap, F)
+        y = jnp.take(y_flat, safe, axis=0)          # (K, d_cap)
+
+        locals_ = _local_train_dynamic(
+            p, x, y, m.astype(jnp.float32), tau, lr, loss_fn=loss_fn,
+        )
+        new = jax.tree_util.tree_map(
+            lambda leaf: ops.fed_agg(
+                leaf, w, use_pallas=use_pallas, interpret=interpret
+            ),
+            locals_,
+        )
+        acc = eval_fn(new, eval_x, eval_y) if eval_fn is not None else jnp.float32(0)
+        return new, (acc, tau, d, feas)
+
+    return jax.lax.scan(one_cycle, params, (xs, ys, c2s, c1s, c0s))
+
+
 class Orchestrator:
     def __init__(
         self,
@@ -159,13 +279,64 @@ class Orchestrator:
         init_params,
         *,
         seed: int = 0,
+        drift: CapacityDrift | None = None,
     ):
         self.mel = mel
         self.problem = problem
         self.loss_fn = loss_fn
         self.params = init_params
         self.rng = np.random.default_rng(seed)
+        self.drift = drift
         self.allocation = SCHEMES[mel.scheme](problem)
+
+    # -- time-varying capacities --------------------------------------------
+    def _coefficient_path(self, cycles: int):
+        """(C, K) f64 capacity rows — drifted when a CapacityDrift is
+        attached, else the base coefficients tiled (static capacities)."""
+        tm = self.problem.time_model
+        if self.drift is None:
+            tile = lambda a: np.broadcast_to(a, (cycles, tm.num_learners)).astype(np.float64)
+            return tile(tm.c2), tile(tm.c1), tile(tm.c0)
+        return self.drift.coefficient_path(tm, cycles)
+
+    def _policy_args(self):
+        """Static (1,)/(1, K) f64 problem tensors shared by every per-cycle
+        re-solve (eager and in-scan paths consume identical values)."""
+        prob = self.problem
+        k = prob.num_learners
+        return (
+            np.asarray([prob.T], np.float64),
+            np.asarray([prob.total_samples], np.int64),
+            np.full((1, k), float(prob.d_lower), np.float64),
+            np.full((1, k), float(prob.d_upper), np.float64),
+            np.ones((1, k), bool),
+        )
+
+    def _reallocate_cycle(self, coeff_path, c: int) -> Allocation:
+        """Eager per-cycle re-solve on cycle c's capacity row (drifted or
+        tiled-static), through the same traced policy the fused scan
+        inlines (bitwise-identical tau/d between the two paths under
+        x64)."""
+        c2s, c1s, c0s = coeff_path
+        policy = _jitted_policy(self.mel.scheme)
+        T1, total1, lo1, hi1, valid1 = self._policy_args()
+        with enable_x64():
+            tau, d, ok = policy(
+                jnp.asarray(c2s[c][None]), jnp.asarray(c1s[c][None]),
+                jnp.asarray(c0s[c][None]), jnp.asarray(T1),
+                jnp.asarray(total1), jnp.asarray(lo1), jnp.asarray(hi1),
+                jnp.asarray(valid1),
+            )
+            tau = np.asarray(tau[0]); d = np.asarray(d[0]); ok = bool(ok[0])
+        if not ok:
+            raise ValueError(
+                "infeasible: even with tau=0 the deadline T cannot absorb "
+                f"d samples (drifted capacities at cycle {c})"
+            )
+        return Allocation(
+            tau=tau.astype(np.int64), d=d.astype(np.int64),
+            method=f"{self.mel.scheme}_drift",
+        )
 
     # -- one global cycle ---------------------------------------------------
     def run_cycle(self, shards: list[Dataset]) -> dict:
@@ -209,17 +380,33 @@ class Orchestrator:
         interpret: bool = False,
     ) -> list[dict]:
         if fused:
-            if reallocate:
-                raise ValueError("fused fast path keeps allocation fixed; "
-                                 "use the eager path for reallocate=True")
             return self.run_fused(
                 train, cycles, eval_fn=eval_fn, eval_batch=eval_batch,
                 use_pallas=use_pallas, interpret=interpret,
+                reallocate=reallocate,
+            )
+        if self.drift is not None and not reallocate:
+            import warnings
+
+            warnings.warn(
+                "a CapacityDrift is attached but reallocate=False: the run "
+                "simulates the BASE capacities and the drift is ignored "
+                "(static-under-drift staleness analysis lives in "
+                "fed.simulation.drift_staleness_sweep)", stacklevel=2,
             )
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
+        # reallocate routes through the traced policy whenever the scheme
+        # has one (same solver the fused scan inlines -> exact-match twin);
+        # schemes without a policy (slsqp, sync) keep the legacy per-problem
+        # re-solve, which only reacts to drift-free problem changes.
+        coeff_path = None
+        if reallocate and self.mel.scheme in TRACED_POLICIES:
+            coeff_path = self._coefficient_path(cycles)
         history = []
         for c in range(cycles):
-            if reallocate and c:
+            if coeff_path is not None:
+                self.allocation = self._reallocate_cycle(coeff_path, c)
+            elif reallocate and c:
                 self.allocation = SCHEMES[self.mel.scheme](self.problem)
             shards = part.draw(self.allocation.d)
             rec = self.run_cycle(shards)
@@ -240,6 +427,7 @@ class Orchestrator:
         eval_batch=None,
         use_pallas: bool = False,
         interpret: bool = False,
+        reallocate: bool = False,
     ) -> list[dict]:
         """Fused scan-over-cycles twin of ``run``: same shard draws, same
         allocation, one jitted lax.scan instead of C host round-trips.
@@ -248,7 +436,28 @@ class Orchestrator:
         ``eval_fn(params, x, y) -> scalar`` (e.g. ``mlp.accuracy``) and is
         evaluated inside the scan on ``eval_batch = (x, y)``; pass None to
         skip per-cycle eval.
+
+        ``reallocate=True`` re-solves the allocation INSIDE the scan each
+        cycle on that cycle's (drifted) capacity state via the traced
+        ``batched_policy(mel.scheme)`` — still one XLA program, no
+        per-cycle host round-trips; the tau/d history and shard contents
+        reproduce the eager ``run(reallocate=True)`` path exactly for the
+        same seed.
         """
+        if reallocate:
+            return self._run_fused_realloc(
+                train, cycles, eval_fn=eval_fn, eval_batch=eval_batch,
+                use_pallas=use_pallas, interpret=interpret,
+            )
+        if self.drift is not None:
+            import warnings
+
+            warnings.warn(
+                "a CapacityDrift is attached but reallocate=False: the run "
+                "simulates the BASE capacities and the drift is ignored "
+                "(static-under-drift staleness analysis lives in "
+                "fed.simulation.drift_staleness_sweep)", stacklevel=2,
+            )
         alloc = self.allocation
         tau = np.asarray(alloc.tau)
         d = np.asarray(alloc.d)
@@ -298,4 +507,102 @@ class Orchestrator:
             if eval_fn is not None:
                 rec["accuracy"] = float(accs[c])
             history.append(rec)
+        return history
+
+    # -- fused fast path with in-scan reallocation ----------------------------
+    def _run_fused_realloc(
+        self,
+        train: Dataset,
+        cycles: int,
+        *,
+        eval_fn=None,
+        eval_batch=None,
+        use_pallas: bool = False,
+        interpret: bool = False,
+    ) -> list[dict]:
+        prob = self.problem
+        policy = batched_policy(self.mel.scheme)  # raises for slsqp/sync
+        if self.mel.aggregation not in ("staleness", "fedavg"):
+            raise ValueError(f"unknown aggregation {self.mel.aggregation!r}")
+        total = prob.total_samples
+        feat = train.x.shape[1]
+        c2s, c1s, c0s = self._coefficient_path(cycles)
+        T1, total1, lo1, hi1, valid1 = self._policy_args()
+
+        # fail fast on an infeasible drifted cycle (same residual-at-zero
+        # criterion the in-scan policy applies) BEFORE the scan trains
+        # through neutralized allocations and the params buffer is donated;
+        # the post-scan feasibility flags stay as a backstop for integer
+        # repair failures the relaxed test cannot see.
+        with np.errstate(divide="ignore", invalid="ignore"):
+            absorb = np.clip(
+                (prob.T - c0s) / c1s, float(prob.d_lower), float(prob.d_upper)
+            ).sum(axis=1)
+        bad = np.flatnonzero(absorb - prob.total_samples < -1e-9)
+        if bad.size:
+            raise ValueError(
+                "infeasible: even with tau=0 the deadline T cannot absorb "
+                f"d samples (drifted capacities at cycle {int(bad[0])})"
+            )
+
+        # d_k <= d_upper bounds the shard split width (tau needs no static
+        # bound: the dynamic trainer while-loops to each cycle's traced max)
+        d_cap = int(prob.d_upper)
+
+        # identical rng consumption to the eager path: one flat draw of the
+        # (constant) per-cycle total; the split by d happens in the scan
+        part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
+        xs = np.zeros((cycles, total, feat), np.float32)
+        ys = np.zeros((cycles, total), np.int32)
+        for c in range(cycles):
+            idx = part.draw_indices(total)
+            xs[c] = train.x[idx]
+            ys[c] = train.y[idx]
+
+        if eval_fn is not None and eval_batch is None:
+            raise ValueError("run_fused needs eval_batch=(x, y) with eval_fn")
+        ex = jnp.asarray(eval_batch[0]) if eval_fn is not None else None
+        ey = jnp.asarray(eval_batch[1]) if eval_fn is not None else None
+
+        with enable_x64():
+            self.params, (accs, taus, ds, feas) = _fused_realloc_cycles(
+                self.params, jnp.asarray(xs), jnp.asarray(ys),
+                jnp.asarray(c2s), jnp.asarray(c1s), jnp.asarray(c0s),
+                jnp.asarray(T1), jnp.asarray(total1), jnp.asarray(lo1),
+                jnp.asarray(hi1), jnp.asarray(valid1),
+                jnp.asarray(self.mel.staleness_gamma, jnp.float64),
+                jnp.asarray(self.mel.lr, jnp.float32), ex, ey,
+                d_cap=d_cap, loss_fn=self.loss_fn,
+                eval_fn=eval_fn, policy=policy,
+                aggregation=self.mel.aggregation, use_pallas=use_pallas,
+                interpret=interpret,
+            )
+            accs, taus, ds, feas = (np.asarray(a) for a in (accs, taus, ds, feas))
+        if not feas.all():
+            bad = int(np.flatnonzero(~feas)[0])
+            raise ValueError(
+                "infeasible: even with tau=0 the deadline T cannot absorb "
+                f"d samples (drifted capacities at cycle {bad})"
+            )
+
+        history = []
+        for c in range(cycles):
+            tau_c = taus[c].astype(np.int64)
+            d_c = ds[c].astype(np.int64)
+            rec = {
+                "max_staleness": max_staleness(tau_c),
+                "avg_staleness": avg_staleness(tau_c),
+                "tau": tau_c,
+                "d": d_c,
+                "wall_clock_s": self.mel.T,
+                "cycle": c,
+                "elapsed_s": (c + 1) * self.mel.T,
+            }
+            if eval_fn is not None:
+                rec["accuracy"] = float(accs[c])
+            history.append(rec)
+        self.allocation = Allocation(
+            tau=history[-1]["tau"], d=history[-1]["d"],
+            method=f"{self.mel.scheme}_drift",
+        )
         return history

@@ -18,7 +18,10 @@ import jax
 from repro.core import (
     AllocationProblem,
     BatchedProblems,
+    CapacityDrift,
     TimeModel,
+    batched_avg_staleness,
+    batched_max_staleness,
     batched_summary,
     indoor_80211_profile,
     mnist_dnn_cost,
@@ -29,7 +32,7 @@ from repro.data.pipeline import Dataset, synthetic_mnist
 from repro.fed.orchestrator import MELConfig, Orchestrator, SCHEMES
 from repro.models import mlp
 
-__all__ = ["build_problem", "run_experiment", "staleness_sweep"]
+__all__ = ["build_problem", "run_experiment", "staleness_sweep", "drift_staleness_sweep"]
 
 
 def build_problem(
@@ -60,7 +63,9 @@ _BATCHED_SCHEMES = {"kkt_sai": solve_kkt_batched, "eta": solve_eta_batched}
 
 def staleness_sweep(ks, T: float, *, schemes=("kkt_sai", "slsqp", "eta"), seed: int = 0,
                     total_samples: int = 6000, seeds=None,
-                    use_batched: bool = True) -> list[dict]:
+                    use_batched: bool = True, reallocate: bool = False,
+                    drift: CapacityDrift | None = None,
+                    cycles: int = 8) -> list[dict]:
     """Fig. 2: max/avg staleness vs number of learners K per scheme.
 
     With ``use_batched`` (default) every (K, seed) fleet is padded into one
@@ -70,7 +75,19 @@ def staleness_sweep(ks, T: float, *, schemes=("kkt_sai", "slsqp", "eta"), seed: 
     identical to the eager path (the batched engine replicates the NumPy
     solvers exactly); infeasible points carry the same error message for
     the bisection-infeasibility case the batched solver detects.
+
+    ``reallocate=True`` switches to the time-varying sweep: capacities
+    drift per cycle (``drift``, default ``CapacityDrift(seed=seed)``) and
+    each scheme is scored both adaptively (re-solved every cycle — ALL
+    case x cycle problems batched into one ``solve_*_batched`` call) and
+    statically (solved once on the base capacities, staleness then measured
+    under the drifted capacities) — see ``drift_staleness_sweep``.
     """
+    if reallocate:
+        return drift_staleness_sweep(
+            ks, T, cycles=cycles, drift=drift, schemes=schemes, seed=seed,
+            total_samples=total_samples, seeds=seeds,
+        )
     seeds = (seed,) if seeds is None else tuple(seeds)
     cases = [(k, s) for k in ks for s in seeds]
     probs = [
@@ -122,6 +139,114 @@ def staleness_sweep(ks, T: float, *, schemes=("kkt_sai", "slsqp", "eta"), seed: 
     return rows
 
 
+def drift_staleness_sweep(ks, T: float, *, cycles: int = 8,
+                          drift: CapacityDrift | None = None,
+                          schemes=("kkt_sai", "eta"), seed: int = 0,
+                          total_samples: int = 6000, seeds=None) -> list[dict]:
+    """Adaptive-vs-static staleness under time-varying edge capacities.
+
+    For every (K, seed) fleet the drifted capacity path (C cycles) is
+    scored two ways per scheme:
+
+      * ``mode="adaptive"`` — the allocation is re-solved on each cycle's
+        true capacities; ALL case x cycle problems are padded into ONE
+        mixed-K ``BatchedProblems`` struct and solved with a single
+        ``solve_*_batched`` call per scheme;
+      * ``mode="static"`` — the allocation is solved once on the base
+        (cycle-averaged) capacities and frozen; each cycle's realized
+        tau_k is then the largest integer feasible under that cycle's TRUE
+        capacities with the frozen d_k, so staleness reflects the drift the
+        static scheduler ignored.
+
+    Rows report mean/worst max-staleness and mean avg-staleness over the C
+    cycles. Schemes are restricted to the batched engines (kkt_sai, eta).
+    """
+    drift = CapacityDrift(seed=seed) if drift is None else drift
+    seeds_ = (seed,) if seeds is None else tuple(seeds)
+    cases = [(k, s) for k in ks for s in seeds_]
+    probs = [
+        build_problem(k, T, seed=s, total_samples=total_samples)
+        for k, s in cases
+    ]
+    unsupported = [s for s in schemes if s not in _BATCHED_SCHEMES]
+    schemes = [s for s in schemes if s in _BATCHED_SCHEMES]
+    n = len(cases)
+    kmax = max(p.num_learners for p in probs)
+
+    # one (n * cycles, kmax) struct holding every drifted cycle-problem
+    paths = [drift.coefficient_path(p.time_model, cycles) for p in probs]
+    b = n * cycles
+    c2 = np.ones((b, kmax)); c1 = np.ones((b, kmax)); c0 = np.zeros((b, kmax))
+    d_lo = np.zeros((b, kmax)); d_hi = np.zeros((b, kmax))
+    valid = np.zeros((b, kmax), bool)
+    Tb = np.full(b, T); total = np.full(b, total_samples, np.int64)
+    for i, (p, (c2s, c1s, c0s)) in enumerate(zip(probs, paths)):
+        kk = p.num_learners
+        rows = slice(i * cycles, (i + 1) * cycles)
+        c2[rows, :kk], c1[rows, :kk], c0[rows, :kk] = c2s, c1s, c0s
+        d_lo[rows, :kk] = p.d_lower
+        d_hi[rows, :kk] = p.d_upper
+        valid[rows, :kk] = True
+    bp_drift = BatchedProblems(c2, c1, c0, Tb, total, d_lo, d_hi, valid)
+    bp_base = BatchedProblems.from_problems(probs)
+
+    out: list[dict] = []
+    for scheme in unsupported:
+        # requested schemes without a batched engine get explicit error
+        # rows (mirrors the non-realloc sweep's row-per-scheme contract)
+        for (k, s) in cases:
+            row = {"K": k, "T": T, "scheme": scheme, "cycles": cycles,
+                   "error": (f"scheme {scheme!r} has no batched engine; the "
+                             "drift sweep supports "
+                             + " | ".join(sorted(_BATCHED_SCHEMES)))}
+            if len(seeds_) > 1:
+                row["seed"] = s
+            out.append(row)
+    for scheme in schemes:
+        solver = _BATCHED_SCHEMES[scheme]
+        ba = solver(bp_drift)
+        summ = ba.summary(bp_drift)
+        ba_static = solver(bp_base)
+        for i, ((k, s), p, (c2s, c1s, c0s)) in enumerate(zip(cases, probs, paths)):
+            rows = slice(i * cycles, (i + 1) * cycles)
+            base = {"K": k, "T": T, "scheme": scheme, "cycles": cycles}
+            if len(seeds_) > 1:
+                base["seed"] = s
+            if not ba.feasible[rows].all() or not ba_static.feasible[i]:
+                out.append({**base, "error": (
+                    "infeasible: even with tau=0 the deadline T cannot "
+                    "absorb d samples"
+                )})
+                continue
+            smax = summ["max_staleness"][rows]
+            savg = summ["avg_staleness"][rows]
+            out.append({
+                **base, "mode": "adaptive",
+                "max_staleness_mean": float(smax.mean()),
+                "max_staleness_worst": int(smax.max()),
+                "avg_staleness_mean": float(savg.mean()),
+                "total_updates_mean": float(summ["total_updates"][rows].mean()),
+            })
+            # frozen allocation, realized tau under each cycle's true caps:
+            # a (C, K)-broadcast TimeModel reuses max_tau's clamp semantics
+            kk = p.num_learners
+            d0 = ba_static.d[i, :kk].astype(float)
+            tau_c = TimeModel(c2=c2s, c1=c1s, c0=c0s).max_tau(
+                np.broadcast_to(d0, c2s.shape), T
+            )
+            smax_s = batched_max_staleness(tau_c)
+            savg_s = batched_avg_staleness(tau_c)
+            upd = (tau_c * d0[None]).sum(axis=1)
+            out.append({
+                **base, "mode": "static",
+                "max_staleness_mean": float(smax_s.mean()),
+                "max_staleness_worst": int(smax_s.max()),
+                "avg_staleness_mean": float(savg_s.mean()),
+                "total_updates_mean": float(upd.mean()),
+            })
+    return out
+
+
 def run_experiment(
     *,
     k: int = 10,
@@ -136,12 +261,20 @@ def run_experiment(
     test: Dataset | None = None,
     fused: bool = False,
     use_pallas: bool = False,
+    reallocate: bool = False,
+    drift: CapacityDrift | None = None,
 ) -> dict:
     """One full MEL run; returns history with accuracy per global cycle.
 
     ``fused=True`` routes through the orchestrator's scan-over-cycles fast
     path (one XLA program for the whole run, eval inside the scan) and
-    reproduces the eager history for the same seed.
+    reproduces the eager history for the same seed. ``reallocate=True``
+    re-solves the allocation every cycle — on the fused path this happens
+    inside the scan on the traced capacity state; pass a ``CapacityDrift``
+    to make the re-solve react to time-varying capacities. ``drift``
+    without ``reallocate`` is ignored (with a warning): the training loop
+    simulates the base capacities; frozen-allocation-under-drift staleness
+    analysis lives in ``drift_staleness_sweep``.
     """
     if train is None or test is None:
         train, test = synthetic_mnist(max(total_samples * 2, 12_000), seed=seed)
@@ -150,16 +283,17 @@ def run_experiment(
         T=T, total_samples=total_samples, lr=lr, scheme=scheme, aggregation=aggregation
     )
     params = mlp.init(jax.random.key(seed))
-    orch = Orchestrator(mel, prob, mlp.loss, params, seed=seed)
+    orch = Orchestrator(mel, prob, mlp.loss, params, seed=seed, drift=drift)
 
     if fused:
         history = orch.run(
             train, cycles, fused=True, eval_fn=mlp.accuracy,
             eval_batch=(test.x[:2000], test.y[:2000]), use_pallas=use_pallas,
+            reallocate=reallocate,
         )
     else:
         eval_fn = functools.partial(_accuracy, x=test.x[:2000], y=test.y[:2000])
-        history = orch.run(train, cycles, eval_fn=eval_fn)
+        history = orch.run(train, cycles, eval_fn=eval_fn, reallocate=reallocate)
     return {
         "scheme": scheme,
         "K": k,

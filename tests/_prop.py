@@ -28,6 +28,9 @@ except ModuleNotFoundError:
         def draw(self, rng):
             return self._sample(rng)
 
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._sample(rng)))
+
     class _Strategies:
         @staticmethod
         def integers(min_value, max_value):
@@ -66,3 +69,56 @@ except ModuleNotFoundError:
             return wrapper
 
         return deco
+
+
+# ---------------------------------------------------------------------------
+# shared domain strategies
+# ---------------------------------------------------------------------------
+
+def make_batched_problems(seed, *, n_problems=3, k_max=8):
+    """Deterministic mixed-K batch: ``(problems, BatchedProblems)``.
+
+    Stress surface for the batched engine's mask semantics: fleet sizes are
+    mixed (1..k_max, the first fleet pinned at k_max so the padded struct
+    shape is stable across draws), ~30% of fleets carry a degenerate
+    ``d_lo == d_hi`` box (total pinned to K*d_lo), and the padding itself
+    yields zero-capacity slots (d_lo = d_hi = 0, valid=False). Problems are
+    time-feasible by construction: T exceeds every learner's c0 + c1*d_u,
+    so at tau=0 the fleet absorbs K*d_u >= total samples.
+    """
+    import numpy as _np
+
+    from repro.core import AllocationProblem, BatchedProblems, TimeModel
+
+    rng = _np.random.default_rng(seed)
+    problems = []
+    for i in range(n_problems):
+        k = k_max if i == 0 else int(rng.integers(1, k_max + 1))
+        c2 = rng.uniform(1e-4, 5e-3, k)
+        c1 = rng.uniform(1e-5, 1e-3, k)
+        c0 = rng.uniform(0.05, 0.5, k)
+        if rng.random() < 0.3:          # degenerate box: d is fully pinned
+            d_l = d_u = int(rng.integers(5, 40))
+            total = k * d_l
+        else:
+            per = int(rng.integers(20, 120))
+            total = k * per
+            d_l = max(1, per // 4)
+            d_u = min(total, 3 * per)
+        T = float(_np.max(c0 + c1 * d_u) * (1.0 + rng.uniform(0.1, 1.0)))
+        problems.append(
+            AllocationProblem(
+                time_model=TimeModel(c2=c2, c1=c1, c0=c0), T=T,
+                total_samples=total, d_lower=d_l, d_upper=d_u,
+            )
+        )
+    return problems, BatchedProblems.from_problems(problems)
+
+
+def batched_problems(**kwargs):
+    """Strategy over ``(problems, BatchedProblems)`` pairs — seeds mapped
+    through ``make_batched_problems`` so real hypothesis and the fallback
+    draw from the identical distribution."""
+    return st.integers(0, 2**20).map(
+        lambda s: make_batched_problems(int(s), **kwargs)
+    )

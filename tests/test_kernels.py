@@ -131,3 +131,62 @@ def test_mamba_scan_sweep(bsz, s, d, n, bd, bt, dtype):
     yr, hr = ref.mamba_scan_ref(dt, x, b, c, a, h0)
     np.testing.assert_allclose(yp, yr, **_tol(dtype))
     np.testing.assert_allclose(hp, hr, **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# waterfill residual: clip-boundary edge cases (Pallas interpret vs ref)
+# ---------------------------------------------------------------------------
+
+def _waterfill_case(b, k, tau, scale_T=1.0):
+    rng = np.random.default_rng(b * 7 + k)
+    c2 = jnp.asarray(rng.uniform(1e-4, 1e-2, (b, k)), jnp.float32)
+    c1 = jnp.asarray(rng.uniform(1e-4, 1e-2, (b, k)), jnp.float32)
+    c0 = jnp.asarray(rng.uniform(0.1, 2.0, (b, k)), jnp.float32)
+    T = jnp.asarray(rng.uniform(5.0, 20.0, (b,)) * scale_T, jnp.float32)
+    lo = jnp.full((b, k), 10.0, jnp.float32)
+    hi = jnp.full((b, k), 900.0, jnp.float32)
+    tot = jnp.asarray(rng.uniform(1e3, 5e3, (b,)), jnp.float32)
+    return jnp.full((b,), tau, jnp.float32), c2, c1, c0, T, lo, hi, tot
+
+
+@pytest.mark.parametrize(
+    "name,tau,scale_T",
+    [
+        # tau* so large every learner clips at d_lo: residual == K*lo - total
+        ("all_saturated_lo", 1e6, 1.0),
+        # tau* = 0 with a huge budget: every learner clips at d_hi
+        ("all_slack_hi", 0.0, 1e4),
+    ],
+)
+@pytest.mark.parametrize("b,k", [(4, 10), (3, 37)])
+def test_waterfill_residual_all_clipped(name, tau, scale_T, b, k):
+    from repro.kernels import ops
+    from repro.kernels.ref import waterfill_residual_ref
+
+    args = _waterfill_case(b, k, tau, scale_T)
+    got = ops.waterfill_residual(*args, use_pallas=True, interpret=True)
+    want = waterfill_residual_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-3)
+    # closed form at the clip boundary
+    _, _, _, _, _, lo, hi, tot = args
+    bound = lo if name == "all_saturated_lo" else hi
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(bound.sum(axis=1) - tot), rtol=2e-5, atol=2e-3
+    )
+
+
+def test_waterfill_residual_k1_fleet():
+    """K=1 fleets: the lane axis is pure padding; the single learner's
+    clipped absorption must survive the 128-lane pad exactly."""
+    from repro.kernels import ops
+    from repro.kernels.ref import waterfill_residual_ref
+
+    args = _waterfill_case(5, 1, 2.0)
+    got = ops.waterfill_residual(*args, use_pallas=True, interpret=True)
+    want = waterfill_residual_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-3)
+    tau, c2, c1, c0, T, lo, hi, tot = (np.asarray(a) for a in args)
+    d = np.clip((T[:, None] - c0) / (c2 * tau[:, None] + c1), lo, hi)
+    np.testing.assert_allclose(
+        np.asarray(got), d.sum(axis=1) - tot, rtol=2e-5, atol=2e-3
+    )

@@ -8,9 +8,11 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from _prop import batched_problems, given, settings, st
 from repro.core import (
     AllocationProblem,
     BatchedProblems,
+    CapacityDrift,
     TimeModel,
     batched_avg_staleness,
     batched_max_staleness,
@@ -94,6 +96,29 @@ def test_kkt_batched_matches_per_problem_randomized():
         assert int(got.tau.max() - got.tau.min()) == int(ref.tau.max() - ref.tau.min())
         assert np.abs(got.d - ref.d).max() <= 2
     assert mismatched <= len(probs) // 10, f"{mismatched} tie-break mismatches"
+
+
+@settings(max_examples=12, deadline=None)
+@given(case=batched_problems())
+def test_kkt_batched_property_mixed_degenerate(case):
+    """Property: over mixed-K batches with degenerate (d_lo == d_hi) boxes
+    and zero-capacity padded slots, every problem's batched solution matches
+    the per-problem NumPy pipeline (same tie-break tolerance as the
+    randomized equivalence test)."""
+    probs, bp = case
+    refs = [solve_kkt_sai(p) for p in probs]
+    ba = solve_kkt_batched(bp)
+    assert bool(ba.feasible.all())
+    for i, (p, ref) in enumerate(zip(probs, refs)):
+        got = ba.allocation(i)
+        got.validate(p)
+        # padded slots never carry work
+        assert not ba.d[i, p.num_learners:].any()
+        assert not ba.tau[i, p.num_learners:].any()
+        if np.array_equal(got.tau, ref.tau) and np.array_equal(got.d, ref.d):
+            continue
+        assert int(got.tau.max() - got.tau.min()) == int(ref.tau.max() - ref.tau.min())
+        assert np.abs(got.d - ref.d).max() <= 2
 
 
 def test_kkt_batched_relaxed_matches_reference():
@@ -213,10 +238,42 @@ def test_pgd_batched_struct_routing():
     np.testing.assert_allclose(np.asarray(d.sum(1)), bp.total.astype(float), rtol=1e-3)
     assert np.all(np.asarray(d) >= bp.d_lo - 1e-3)
     assert np.all(np.asarray(d) <= bp.d_hi + 1e-3)
-    # mixed-K batches are rejected, not silently mis-solved
-    mixed = BatchedProblems.from_problems([probs[0], make_problem(k=4, seed=9)])
-    with pytest.raises(ValueError):
-        solve_pgd_batched(mixed)
+
+
+def test_pgd_batched_padded_mixed_k_regression():
+    """Mixed-K padded batches solve exactly like their unpadded rows —
+    regression for the pre-mask behavior where padded slots entered the
+    smoothed staleness objective and the projection mass, silently skewing
+    every real learner's d."""
+    from repro.core.solver_numeric import _pgd_run
+
+    small = make_problem(k=4, T=15.0, d=2000, seed=9)
+    probs = [make_problem(k=6, T=15.0, d=3000, seed=0), small]
+    bp = BatchedProblems.from_problems(probs)
+    tau, d = solve_pgd_batched(bp, steps=300)
+    tau, d = np.asarray(tau), np.asarray(d)
+
+    # padded slots carry exactly zero work and zero tau
+    assert not d[1, 4:].any() and not tau[1, 4:].any()
+    for i, p in enumerate(probs):
+        kk = p.num_learners
+        np.testing.assert_allclose(d[i, :kk].sum(), p.total_samples, rtol=1e-3)
+        assert np.all(d[i, :kk] >= p.d_lower - 1e-3)
+        assert np.all(d[i, :kk] <= p.d_upper + 1e-3)
+
+    # the padded row reproduces the standalone unpadded solve up to float
+    # noise (padded slots contribute exact zeros, but the wider K axis
+    # reassociates reductions, and 300 annealed steps amplify the ULPs)
+    tm = small.time_model
+    d0 = np.full(4, small.total_samples / 4, np.float32)
+    tau_s, d_s = _pgd_run(
+        jnp.asarray(d0), jnp.asarray(tm.c2, jnp.float32),
+        jnp.asarray(tm.c1, jnp.float32), jnp.asarray(tm.c0, jnp.float32),
+        jnp.float32(small.T), jnp.float32(small.d_lower),
+        jnp.float32(small.d_upper), jnp.float32(small.total_samples), 300,
+    )
+    np.testing.assert_allclose(d[1, :4], np.asarray(d_s), rtol=1e-2, atol=1.0)
+    np.testing.assert_allclose(tau[1, :4], np.asarray(tau_s), rtol=1e-2, atol=1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -241,17 +298,100 @@ def test_fused_orchestrator_matches_eager_history():
     )
 
 
-def test_fused_orchestrator_rejects_reallocate():
+def test_fused_realloc_matches_eager_drift_history():
+    """run_fused(reallocate=True): the in-scan per-cycle KKT re-solve on
+    drifted capacities reproduces the eager per-cycle-reallocation history
+    (tau, d, shard draws) exactly for a fixed seed; accuracies agree to
+    float tolerance (different zero-padding widths reassociate the masked
+    loss reductions)."""
+    from repro.fed.simulation import run_experiment
+
+    drift = CapacityDrift(clock_jitter=0.15, fading_sigma_db=2.0, seed=5)
+    kw = dict(k=4, T=15.0, cycles=3, total_samples=1200, seed=3,
+              reallocate=True, drift=drift)
+    eager = run_experiment(**kw)
+    fused = run_experiment(**kw, fused=True)
+    he, hf = eager["history"], fused["history"]
+    assert len(he) == len(hf) == 3
+    for re_, rf in zip(he, hf):
+        np.testing.assert_array_equal(re_["tau"], rf["tau"])
+        np.testing.assert_array_equal(re_["d"], rf["d"])
+        assert re_["max_staleness"] == rf["max_staleness"]
+        assert re_["cycle"] == rf["cycle"] and re_["elapsed_s"] == rf["elapsed_s"]
+    # the drift actually moves the allocation between cycles
+    taus = np.stack([h["tau"] for h in he])
+    ds = np.stack([h["d"] for h in he])
+    assert not (np.all(taus == taus[0]) and np.all(ds == ds[0]))
+    np.testing.assert_allclose(
+        [h["accuracy"] for h in he], [h["accuracy"] for h in hf], atol=5e-3
+    )
+
+
+def test_fused_realloc_policy_swap_eta():
+    """The in-scan reallocation policy follows MELConfig.scheme: the eta
+    baseline swaps in for the KKT pipeline and still matches its eager
+    twin exactly."""
+    from repro.fed.simulation import run_experiment
+
+    drift = CapacityDrift(seed=7)
+    kw = dict(k=4, T=15.0, cycles=2, total_samples=1200, seed=3,
+              scheme="eta", reallocate=True, drift=drift)
+    eager = run_experiment(**kw)
+    fused = run_experiment(**kw, fused=True)
+    for re_, rf in zip(eager["history"], fused["history"]):
+        np.testing.assert_array_equal(re_["tau"], rf["tau"])
+        np.testing.assert_array_equal(re_["d"], rf["d"])
+
+
+def test_fused_realloc_infeasible_drift_fails_fast():
+    """An infeasible drifted cycle fails BEFORE the scan runs: params are
+    untouched (not donated/overwritten after training through garbage)."""
+    from repro.data.pipeline import synthetic_mnist
+    from repro.fed.orchestrator import MELConfig, Orchestrator
+    from repro.models import mlp
+
+    train, _ = synthetic_mnist(3000, n_test=10, seed=0)
+    prob = make_problem(k=4, T=15.0, d=1200)
+    drift = CapacityDrift(fading_sigma_db=30.0, fading_clip_db=30.0, seed=0)
+    orch = Orchestrator(MELConfig(T=15.0, total_samples=1200), prob, mlp.loss,
+                        mlp.init(jax.random.key(0)), drift=drift)
+    p0 = orch.params
+    with pytest.raises(ValueError, match="cannot absorb"):
+        orch.run(train, 3, fused=True, reallocate=True)
+    assert orch.params is p0
+
+
+def test_fused_realloc_rejects_untraced_scheme():
     from repro.data.pipeline import synthetic_mnist
     from repro.fed.orchestrator import MELConfig, Orchestrator
     from repro.models import mlp
 
     train, _ = synthetic_mnist(2000, n_test=10, seed=0)
     prob = make_problem(k=4, T=15.0, d=1000)
-    mel = MELConfig(T=15.0, total_samples=1000)
+    mel = MELConfig(T=15.0, total_samples=1000, scheme="slsqp")
     orch = Orchestrator(mel, prob, mlp.loss, mlp.init(jax.random.key(0)))
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="no batched/traced policy"):
         orch.run(train, 2, fused=True, reallocate=True)
+
+
+def test_drift_staleness_sweep_adaptive_beats_static():
+    """The paper's core claim under time-varying capacities: re-solving
+    each cycle (adaptive) never does worse than freezing the allocation
+    (static), and the KKT scheme strictly improves on this drift path."""
+    from repro.fed.simulation import staleness_sweep
+
+    rows = staleness_sweep(
+        [5, 8], 7.5, schemes=("kkt_sai", "eta"), reallocate=True, cycles=6,
+        total_samples=4000,
+    )
+    by = {(r["K"], r["scheme"], r["mode"]): r for r in rows}
+    for k in (5, 8):
+        for scheme in ("kkt_sai", "eta"):
+            ada = by[(k, scheme, "adaptive")]
+            sta = by[(k, scheme, "static")]
+            assert ada["max_staleness_mean"] <= sta["max_staleness_mean"] + 1e-9
+        assert (by[(k, "kkt_sai", "adaptive")]["max_staleness_mean"]
+                < by[(k, "kkt_sai", "static")]["max_staleness_mean"])
 
 
 def test_batched_sweep_matches_eager_sweep():
