@@ -1,0 +1,113 @@
+"""Event-driven async federation benchmark (``--only async``).
+
+Two sections, merged into ``BENCH_alloc.json``:
+
+  * ``modes`` — the paper's cycle-gated scheme vs FedAsync vs buffered
+    aggregation at EQUAL virtual time under ``CapacityDrift`` (final
+    accuracy, version-staleness profile, aggregation counts) on the
+    MNIST-constants 802.11 fleet;
+  * ``engine`` — wall-time of the eager per-event loop vs the bucketed
+    ``lax.scan`` fast path on a spread-period fleet (the event schedule is
+    identical; the bucketed path trades masked dense per-bucket compute for
+    zero per-event host round-trips, so its CPU number is a lower bound on
+    the accelerator win, like the fused orchestrator's).
+
+  PYTHONPATH=src python -m benchmarks.run --only async
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.alloc_bench import _merge_out
+from repro.core import CapacityDrift
+
+
+def bench_modes(*, ks, T: float, cycles: int, total: int, seed: int = 0) -> list[dict]:
+    from repro.fed.simulation import async_mode_sweep
+
+    drift = CapacityDrift(clock_jitter=0.15, fading_sigma_db=2.5, seed=seed)
+    rows = async_mode_sweep(
+        ks, T, cycles=cycles, total_samples=total, drift=drift, seed=seed,
+        reallocate=True,
+    )
+    for r in rows:
+        r.pop("accuracy_trace", None)
+    return rows
+
+
+def bench_engine(*, horizon_cycles: int = 6, seed: int = 0) -> dict:
+    """Eager event loop vs bucketed scan: same schedule, same aggregations."""
+    import jax
+
+    from repro.data.pipeline import synthetic_mnist
+    from repro.fed.async_engine import AsyncConfig, AsyncFedEngine
+    from repro.fed.simulation import build_spread_problem
+    from repro.models import mlp
+
+    prob = build_spread_problem(k=4, total_samples=80)
+    horizon = horizon_cycles * prob.T
+    train, _ = synthetic_mnist(4000, n_test=10, seed=seed)
+    cfg = AsyncConfig(mode="fedasync", alpha=0.6)
+    params = mlp.init(jax.random.key(seed))
+
+    def eager():
+        eng = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
+        return eng, eng.run(train, horizon)
+
+    probe = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
+    nb = probe.suggest_num_buckets(train, horizon)
+
+    def bucketed():
+        eng = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
+        return eng, eng.run_bucketed(train, horizon, nb)
+
+    _, h_warm = eager()       # compile + warmup both paths
+    bucketed()
+    t0 = time.time()
+    _, h_e = eager()
+    eager_s = time.time() - t0
+    t0 = time.time()
+    _, h_b = bucketed()
+    bucket_s = time.time() - t0
+    assert len(h_e) == len(h_b) == len(h_warm)
+    n = len(h_e)
+    return {
+        "K": prob.num_learners,
+        "events": n,
+        "num_buckets": nb,
+        "eager_s": round(eager_s, 3),
+        "bucketed_s": round(bucket_s, 3),
+        "eager_events_per_s": round(n / eager_s, 1),
+        "bucketed_events_per_s": round(n / bucket_s, 1),
+        "speedup": round(eager_s / bucket_s, 2),
+    }
+
+
+def main(quick: bool = False) -> None:
+    ks = [5] if quick else [5, 8]
+    cycles = 3 if quick else 6
+    total = 600 if quick else 1500
+
+    rows = bench_modes(ks=ks, T=5.0, cycles=cycles, total=total)
+    print("K,mode,final_acc,aggregations,stal_mean,stal_max")
+    for r in rows:
+        if "error" in r:
+            print(f"{r['K']},{r['mode']},ERROR: {r['error']}")
+            continue
+        print(f"{r['K']},{r['mode']},{r['final_accuracy']:.3f},"
+              f"{r['aggregations']},{r['staleness_mean']:.2f},"
+              f"{r['staleness_max']}")
+
+    eng = bench_engine(horizon_cycles=4 if quick else 8)
+    print(f"engine eager {eng['eager_events_per_s']} ev/s vs bucketed "
+          f"{eng['bucketed_events_per_s']} ev/s over {eng['events']} events "
+          f"({eng['speedup']}x, H={eng['num_buckets']})")
+
+    _merge_out("async", {"modes": rows, "engine": eng})
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,9 @@ Sections:
   alloc     batched allocation engine vs per-problem Python loop (BENCH_alloc.json)
   realloc   per-cycle reallocation under drift: batched re-solves + the
             in-scan reallocating orchestrator (merges into BENCH_alloc.json)
+  async     event-driven async federation: cycle-gated vs FedAsync vs
+            buffered under drift + eager-vs-bucketed engine wall-time
+            (merges into BENCH_alloc.json)
   kernels   hot-spot micro-benchmarks
   roofline  per (arch x shape x mesh) roofline terms from dry-run artifacts
 """
@@ -22,6 +25,7 @@ import time
 from benchmarks import (
     accuracy_vs_cycles,
     alloc_bench,
+    async_bench,
     kernel_bench,
     roofline_report,
     solver_table,
@@ -33,6 +37,7 @@ SECTIONS = [
     ("solver_table", solver_table.main),
     ("alloc_bench", alloc_bench.main),
     ("realloc_bench", alloc_bench.realloc_main),
+    ("async_bench", async_bench.main),
     ("kernel_bench", kernel_bench.main),
     ("roofline_report", roofline_report.main),
     ("fig3_accuracy_vs_cycles", accuracy_vs_cycles.main),

@@ -19,7 +19,14 @@ from repro.core.solver_batched import (
 from repro.core.solver_kkt import solve as solve_kkt_sai
 from repro.core.solver_kkt import solve_relaxed, suggest_and_improve
 from repro.core.solver_numeric import solve_pgd_batched, solve_pgd_jax, solve_slsqp
-from repro.core.staleness import avg_staleness, max_staleness
+from repro.core.staleness import (
+    STALENESS_FNS,
+    avg_staleness,
+    max_staleness,
+    staleness_factor,
+    version_staleness,
+    version_staleness_profile,
+)
 from repro.core.time_model import (
     CapacityDrift,
     ChannelParams,
@@ -61,7 +68,11 @@ __all__ = [
     "solve_relaxed",
     "solve_slsqp",
     "solve_synchronous",
+    "STALENESS_FNS",
+    "staleness_factor",
     "staleness_weights",
+    "version_staleness",
+    "version_staleness_profile",
     "suggest_and_improve",
     "transformer_cost",
 ]

@@ -160,9 +160,15 @@ class CapacityDrift:
 
     ``factors_at`` uses ``jax.random.fold_in(key(seed), cycle)`` so it is
     traceable on a traced cycle index (usable inside ``lax.scan``) and the
-    whole path is reproducible from ``seed`` alone; draws are generated in
-    float32 regardless of the x64 flag so host-precomputed paths and traced
-    in-scan consumers see bit-identical factors.
+    whole path is reproducible from ``seed`` alone. Draws are generated in
+    float32 regardless of the x64 flag, so the random bits are identical in
+    every compilation context; the one transcendental (the dB -> linear
+    ``10^(x/10)``) is requested in float64 and rounded once to float32,
+    which keeps jit-fused and eager/vmapped evaluations within 1 f32 ULP of
+    each other (XLA may narrow the widened pow under jit, so exact bitwise
+    equality across compilation contexts is NOT guaranteed — only the
+    integer allocations derived from the rows are, pinned by the
+    fused-vs-eager orchestrator equivalence tests).
     """
 
     clock_jitter: float = 0.1
@@ -184,21 +190,30 @@ class CapacityDrift:
             self.fading_sigma_db * jax.random.normal(kf, (k,), jnp.float32),
             -self.fading_clip_db, self.fading_clip_db,
         )
-        rate = jnp.power(jnp.float32(10.0), db / 10.0)
+        # f64 pow + one rounding: bit-stable across jit/eager/vmap contexts
+        # (falls back to plain f32 pow when x64 is disabled)
+        rate = jnp.power(
+            jnp.asarray(10.0, jnp.float64), db.astype(jnp.float64) / 10.0
+        ).astype(jnp.float32)
         return clock, rate
 
     def coefficient_path(
         self, tm: "TimeModel", cycles: int
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Drifted (c2, c1, c0) float64 numpy arrays of shape (C, K); row c
-        is the fleet's true capacity during global cycle c."""
+        is the fleet's true capacity during global cycle c. Runs under
+        ``enable_x64`` so the factors match the traced in-scan
+        ``factors_at`` consumers as closely as the compiler allows (within
+        1 f32 ULP; see class docstring)."""
         import jax
         import jax.numpy as jnp
+        from jax.experimental import enable_x64
 
         k = tm.num_learners
-        clock, rate = jax.vmap(lambda c: self.factors_at(c, k))(
-            jnp.arange(cycles)
-        )
+        with enable_x64():
+            clock, rate = jax.vmap(lambda c: self.factors_at(c, k))(
+                jnp.arange(cycles)
+            )
         clock = np.asarray(clock, np.float64)
         rate = np.asarray(rate, np.float64)
         return tm.c2[None] / clock, tm.c1[None] / rate, tm.c0[None] / rate

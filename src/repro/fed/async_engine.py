@@ -1,0 +1,801 @@
+"""Event-driven asynchronous federation engine (FedAsync / FedBuff style).
+
+The paper's scheme is asynchronous only *within* a global cycle: every
+learner's work is gated to the same wall-clock budget ``T`` (constraint 7b)
+and the server aggregates once per cycle. This module drops the cycle gate:
+a **virtual-clock event queue** lets every learner upload the moment it
+finishes, and the server reacts per upload in the style of FedAsync (Xie et
+al., arXiv:1903.03934) and FedBuff/FedAST (arXiv:2106.06639 / 2406.00302):
+
+  * each learner's task completion time follows the paper's own per-learner
+    wall-clock model (Eq. 5: download + tau_k * compute + upload =
+    ``C2 tau_k d_k + C1 d_k + C0`` under the capacities of the drift block
+    it was dispatched in);
+  * ``mode="fedasync"`` — on every arrival the server mixes immediately,
+    ``w <- (1 - alpha * s(v)) * w + alpha * s(v) * w_k`` with **version
+    staleness** ``v = server_version - dispatch_version`` and the
+    constant / hinge / polynomial discount ``s`` of the FedAsync paper
+    (``core.staleness.staleness_factor``);
+  * ``mode="buffered"`` — arrivals accumulate in a size-``M`` buffer; a
+    full buffer is flushed as one staleness-weighted aggregation (the
+    intra-buffer tau weighting of ``core.aggregation.staleness_weights``
+    times the version-staleness discount) and bumps the server version
+    once. With ``M = K`` and ``barrier=True`` the engine degenerates to
+    the paper's cycle-gated scheme and reproduces ``Orchestrator.run``
+    exactly (pinned by tests);
+  * at every (re)dispatch the learner's ``(tau_k, d_k)`` comes from the
+    fleet-level allocation re-solved through the existing traced
+    ``core.solver_batched.batched_policy`` on the capacities of the current
+    drift block — adaptive allocation composes with true asynchrony.
+
+Two execution paths share one host-side **schedule**. The key structural
+property is that the event timeline is *model-independent*: completion
+times, versions, staleness, shard draws and aggregation coefficients depend
+only on allocations and capacities, never on parameter values. The
+scheduler therefore simulates the whole event system once on the host
+(cheap scalar math, identical rng consumption for both paths) and the
+device work is pure tensor compute:
+
+  * ``run`` — eager: walk the schedule, train each arrival's dispatched
+    model (one ``local_train`` call per event), mix/flush per event. One
+    host round-trip per event.
+  * ``run_bucketed`` — device-resident fast path: completion times are
+    quantized onto a ``num_buckets`` time grid and ALL arrivals run as one
+    jitted ``lax.scan`` over buckets. Each bucket trains the full fleet's
+    carried dispatch models (masked, to the schedule-wide max tau), folds
+    arrivals into a weighted accumulator and applies flushes as masked
+    ``kernels.ops.fed_agg`` contractions, with the (server, dispatched,
+    accumulator) params carry donated — large fleets stay ONE XLA program,
+    like ``Orchestrator.run_fused``. The path is exact (same aggregation
+    sequence to float tolerance) whenever the grid resolves individual
+    arrivals; with ``strict=False``, buckets holding several fedasync
+    arrivals are composed into sequentially-equivalent weights (the
+    aggregation stays exact; only the mid-bucket redispatch model is
+    approximated by the bucket-end server). Memory cost: the pre-staged
+    shard tensor is (H, K, d_cap, F) — the same trade ``run_fused`` makes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AllocationProblem,
+    CapacityDrift,
+    aggregate,
+    fedavg_weights,
+    staleness_weights,
+)
+from repro.core.staleness import (
+    STALENESS_FNS,
+    avg_staleness,
+    max_staleness,
+    staleness_factor,
+    version_staleness_profile,
+)
+from repro.data.pipeline import Dataset, FederatedPartitioner
+from repro.fed.orchestrator import (
+    SCHEMES,
+    _stage_shards,
+    coefficient_rows,
+    local_train,
+    local_train_stacked,
+    solve_policy_row,
+)
+
+__all__ = ["AsyncConfig", "AsyncFedEngine", "summarize_async_history"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Server behaviour of the event-driven engine.
+
+    ``buffer_size = 0`` means "fleet size K" (resolved at engine init).
+    ``barrier=True`` (buffered only, requires M = K) gates every round on
+    the slowest learner and redispatches the whole fleet at the cycle
+    boundary — the paper's scheme as a point in this family.
+    """
+
+    mode: str = "fedasync"             # fedasync | buffered
+    alpha: float = 0.6                 # FedAsync server mixing rate
+    staleness_fn: str = "poly"         # constant | hinge | poly
+    staleness_a: float = 0.5           # discount exponent / slope
+    staleness_b: float = 4.0           # hinge knee
+    buffer_size: int = 0               # M (buffered); 0 -> K
+    barrier: bool = False              # cycle barrier (paper scheme at M=K)
+    aggregation: str = "staleness"     # intra-buffer weighting: staleness|fedavg
+    staleness_gamma: float = 1.0
+    lr: float = 0.1
+    scheme: str = "kkt_sai"            # allocation policy at (re)dispatch
+    reallocate: bool = False           # re-solve per drift block
+
+    def __post_init__(self):
+        if self.mode not in ("fedasync", "buffered"):
+            raise ValueError(f"unknown mode {self.mode!r}: fedasync | buffered")
+        if self.staleness_fn not in STALENESS_FNS:
+            raise ValueError(
+                f"unknown staleness fn {self.staleness_fn!r}: "
+                + " | ".join(STALENESS_FNS)
+            )
+        if self.aggregation not in ("staleness", "fedavg"):
+            raise ValueError(f"unknown aggregation {self.aggregation!r}")
+        if not (0.0 < self.alpha <= 1.0):
+            raise ValueError("alpha must be in (0, 1]")
+        if self.barrier and self.mode != "buffered":
+            raise ValueError("barrier=True is the buffered (M=K) regime; "
+                             "fedasync has no cycle gate")
+
+
+# ---------------------------------------------------------------------------
+# host-side schedule (model-independent event timeline)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Arrival:
+    """One upload event. Aggregation coefficients are filled retroactively
+    when the event's flush group closes (the schedule is fully simulated
+    before any training runs, so this is always possible)."""
+
+    seq: int                 # chronological arrival index
+    learner: int
+    t: float                 # completion (= arrival) time
+    tau: int
+    d: int
+    idx: np.ndarray          # shard sample indices drawn at dispatch
+    dispatch_t: float
+    dispatch_version: int
+    staleness: int           # server_version - dispatch_version at arrival
+    version_after: int = 0
+    flush: bool = False      # this arrival closes a flush
+    keep: float = 1.0        # server self-weight at the flush
+    weight: float = 0.0      # this local model's coefficient in its flush
+    flush_id: int = -1
+    group_weights: np.ndarray | None = None   # on flush arrivals only
+
+
+@dataclasses.dataclass
+class _Schedule:
+    arrivals: list
+    n_flushes: int
+    d_cap: int               # max d over arrivals (>= 1)
+    max_tau: int             # max tau over arrivals (>= 1)
+
+
+class AsyncFedEngine:
+    """Virtual-clock asynchronous federation over one fleet.
+
+    Parameters mirror ``Orchestrator``: the ``AllocationProblem`` supplies
+    the per-learner wall-clock model, ``drift`` (optional) the per-block
+    capacity evolution (block length = ``problem.T``, the paper's
+    capacities-constant-per-cycle block model; task cost is evaluated under
+    the block of its dispatch time).
+    """
+
+    def __init__(
+        self,
+        cfg: AsyncConfig,
+        problem: AllocationProblem,
+        loss_fn,
+        init_params,
+        *,
+        seed: int = 0,
+        drift: CapacityDrift | None = None,
+    ):
+        self.cfg = cfg
+        self.problem = problem
+        self.loss_fn = loss_fn
+        self.params = init_params
+        self.rng = np.random.default_rng(seed)
+        self.drift = drift
+        k = problem.num_learners
+        self.buffer_size = cfg.buffer_size or k
+        if not (1 <= self.buffer_size <= k):
+            raise ValueError(f"buffer_size must be in [1, K={k}]")
+        if cfg.barrier and self.buffer_size != k:
+            raise ValueError(
+                "the cycle barrier gates on the whole fleet: it requires "
+                f"buffer_size == K (= {k}); M < K is the event-driven "
+                "buffered regime"
+            )
+        # the paper-scheme allocation on the base capacities (used by the
+        # barrier path so it matches Orchestrator.run bitwise); event-mode
+        # dispatches go through the traced batched_policy instead.
+        self.allocation = SCHEMES[cfg.scheme](problem)
+        self._alloc_cache: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._static_alloc: tuple[np.ndarray, np.ndarray] | None = None
+
+    # -- capacities & allocation --------------------------------------------
+    def _block_rows(self, nblocks: int):
+        """(C, K) f64 capacity rows per drift block — the SAME row source
+        as ``Orchestrator._coefficient_path`` so barrier runs replay the
+        orchestrator's exact re-solves."""
+        return coefficient_rows(self.problem, self.drift, nblocks)
+
+    def _solve_row(self, c2r, c1r, c0r, *, label) -> tuple[np.ndarray, np.ndarray]:
+        """Fleet allocation (tau, d) on one (K,) capacity row, through the
+        SAME traced-policy solve the orchestrator's re-solves use (the
+        barrier-equivalence guarantee depends on sharing it)."""
+        return solve_policy_row(
+            self.cfg.scheme, c2r, c1r, c0r, self.problem, label=label
+        )
+
+    def _alloc_for_block(self, block: int, rows) -> tuple[np.ndarray, np.ndarray]:
+        """Per-block adaptive allocation (cached per drift block)."""
+        hit = self._alloc_cache.get(block)
+        if hit is None:
+            c2s, c1s, c0s = rows
+            hit = self._solve_row(
+                c2s[block], c1s[block], c0s[block],
+                label=f"capacities at drift block {block}",
+            )
+            self._alloc_cache[block] = hit
+        return hit
+
+    def _alloc_base(self) -> tuple[np.ndarray, np.ndarray]:
+        """Static allocation: solved ONCE on the base (undrifted)
+        capacities — the frozen-scheduler regime a drifting run is compared
+        against."""
+        if self._static_alloc is None:
+            tm = self.problem.time_model
+            self._static_alloc = self._solve_row(
+                tm.c2.astype(np.float64), tm.c1.astype(np.float64),
+                tm.c0.astype(np.float64), label="base capacities",
+            )
+        return self._static_alloc
+
+    # -- schedule ------------------------------------------------------------
+    def _build_schedule(
+        self, part: FederatedPartitioner, horizon: float, max_events: int
+    ) -> _Schedule:
+        """Simulate the full event system WITHOUT touching model values:
+        completion times, version bookkeeping, per-dispatch shard draws and
+        all aggregation coefficients. Both executors consume this verbatim,
+        so their rng streams and event orders agree by construction."""
+        cfg, prob = self.cfg, self.problem
+        k_fleet, T = prob.num_learners, prob.T
+        m = self.buffer_size
+        nblocks = max(int(np.ceil(horizon / T)) + 1, 1)
+        rows = self._block_rows(nblocks)
+        # without drift every block row is the tiled base row: re-solving
+        # per block would just repeat the static solve
+        realloc = cfg.reallocate and self.drift is not None
+        heap: list = []
+        seq = 0
+        server_version = 0
+        arrivals: list[_Arrival] = []
+        group: list[_Arrival] = []
+        flush_id = 0
+
+        def dispatch(k: int, t: float):
+            nonlocal seq
+            block = min(int(t // T), nblocks - 1)
+            if realloc:
+                tau_a, d_a = self._alloc_for_block(block, rows)
+            else:
+                tau_a, d_a = self._alloc_base()
+            tau_k, d_k = int(tau_a[k]), int(d_a[k])
+            idx = part.draw_indices(d_k)
+            c2, c1, c0 = (r[block, k] for r in rows)
+            cost = float(c2 * tau_k * d_k + c1 * d_k + c0)
+            heapq.heappush(
+                heap, (t + cost, seq, (k, t, server_version, tau_k, d_k, idx))
+            )
+            seq += 1
+
+        for k in range(k_fleet):
+            dispatch(k, 0.0)
+
+        while heap and len(arrivals) < max_events:
+            t_e, _, (k, t_disp, v_disp, tau_k, d_k, idx) = heapq.heappop(heap)
+            if t_e > horizon:
+                break
+            a = _Arrival(
+                seq=len(arrivals), learner=k, t=t_e, tau=tau_k, d=d_k,
+                idx=idx, dispatch_t=t_disp, dispatch_version=v_disp,
+                staleness=server_version - v_disp,
+            )
+            group.append(a)
+            arrivals.append(a)
+            if cfg.mode == "fedasync" or len(group) == m:
+                taus = np.array([g.tau for g in group], float)
+                ds = np.array([g.d for g in group], float)
+                phi = staleness_factor(
+                    np.array([g.staleness for g in group], float),
+                    kind=cfg.staleness_fn, a=cfg.staleness_a, b=cfg.staleness_b,
+                )
+                if cfg.mode == "fedasync":
+                    w = np.array([cfg.alpha]) * phi
+                    keep = 1.0 - float(w[0])
+                else:
+                    # the paper's intra-buffer weighting (shared with the
+                    # barrier/cycle server), version-discounted by phi;
+                    # the renormalization absorbs staleness_weights' own
+                    base = (fedavg_weights(ds)
+                            if cfg.aggregation == "fedavg" else
+                            staleness_weights(
+                                taus, ds, gamma=cfg.staleness_gamma))
+                    w = base * phi
+                    w = w / w.sum()
+                    keep = 0.0
+                for g, wg in zip(group, w):
+                    g.weight = float(wg)
+                    g.flush_id = flush_id
+                a.flush = True
+                a.keep = float(keep)
+                a.group_weights = np.asarray(w, np.float64)
+                server_version += 1
+                flush_id += 1
+                group = []
+            a.version_after = server_version
+            dispatch(k, t_e)   # immediate redispatch with the current server
+
+        return _Schedule(
+            arrivals=arrivals, n_flushes=flush_id,
+            d_cap=max([a.d for a in arrivals], default=1),
+            max_tau=max([a.tau for a in arrivals] + [1]),
+        )
+
+    def suggest_num_buckets(
+        self, train: Dataset, horizon: float, *,
+        max_events: int = 100_000, cap: int = 4096,
+    ) -> int:
+        """Smallest grid that resolves every arrival into its own bucket
+        (the exact-replay regime of ``run_bucketed``), found by replaying
+        the schedule on a CLONED rng so the engine's own stream is
+        untouched. Raises when the schedule's closest arrival pair needs
+        more than ``cap`` buckets — the paper's KKT allocator equalizes
+        finish times, so near-ties are normal there; fall back to
+        ``strict=False`` merging in that regime."""
+        import copy
+
+        rng = copy.deepcopy(self.rng)
+        part = FederatedPartitioner(train, seed=int(rng.integers(2**31)))
+        sched = self._build_schedule(part, horizon, max_events)
+        # never-flushed trailing arrivals are excluded from the grid by
+        # run_bucketed, so they must not constrain it here either
+        ts = sorted(a.t for a in sched.arrivals if a.flush_id >= 0)
+        if any(b == a for a, b in zip(ts, ts[1:])):
+            raise ValueError(
+                "arrival times tie EXACTLY (homogeneous capacities): no "
+                "grid resolves them into distinct buckets; use "
+                "strict=False (fedasync merges ties via composed weights) "
+                "— buffered schedules whose flushes coincide are "
+                "unrepresentable on a time grid"
+            )
+        gaps = [b - a for a, b in zip(ts, ts[1:])]
+        if not gaps:
+            return min(max(len(ts), 1), cap)
+        need = int(np.ceil(horizon / min(gaps))) + 1
+        if need > cap:
+            raise ValueError(
+                f"resolving all arrivals needs {need} buckets (> cap={cap}): "
+                "completion times nearly tie; use strict=False or a wider "
+                "grid consciously"
+            )
+        return need
+
+    # -- shared pieces -------------------------------------------------------
+    def _eval_pair(self, eval_fn, eval_batch):
+        if eval_fn is None:
+            return None, None, None
+        if eval_batch is None:
+            raise ValueError("eval_fn needs eval_batch=(x, y)")
+        return (jax.jit(eval_fn), jnp.asarray(eval_batch[0]),
+                jnp.asarray(eval_batch[1]))
+
+    def _flush_row(self, ev: _Arrival, group: list[_Arrival]) -> dict:
+        ss = [g.staleness for g in group]
+        return {
+            "event": ev.flush_id,
+            "t": ev.t,
+            "mode": self.cfg.mode,
+            "server_version": ev.version_after,
+            "learners": [g.learner for g in group],
+            "tau": np.array([g.tau for g in group], np.int64),
+            "d": np.array([g.d for g in group], np.int64),
+            "staleness_list": list(map(int, ss)),
+            "version_staleness_max": int(max(ss)),
+            "version_staleness_mean": float(np.mean(ss)),
+            "weights": np.asarray(ev.group_weights, np.float64),
+            "keep": ev.keep,
+        }
+
+    # -- eager event loop ----------------------------------------------------
+    def run(
+        self,
+        train: Dataset,
+        horizon: float | None = None,
+        *,
+        cycles: int | None = None,
+        eval_fn=None,
+        eval_batch=None,
+        max_events: int = 100_000,
+    ) -> list[dict]:
+        """Simulate to virtual time ``horizon`` (seconds). Returns one
+        history row per server aggregation (per arrival in fedasync mode,
+        per buffer flush in buffered mode). ``eval_fn`` must be
+        jit-traceable with signature ``(params, x, y) -> scalar`` and is
+        evaluated on ``eval_batch`` after every aggregation.
+
+        With ``cfg.barrier=True`` the run is round-gated instead (pass
+        ``cycles``, or ``horizon`` as a multiple of T) and reproduces
+        ``Orchestrator.run`` exactly for the same seed.
+        """
+        if self.cfg.barrier:
+            return self._run_barrier(
+                train, horizon=horizon, cycles=cycles,
+                eval_fn=eval_fn, eval_batch=eval_batch,
+            )
+        if horizon is None:
+            raise ValueError("event mode needs a virtual-time horizon")
+        part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
+        sched = self._build_schedule(part, horizon, max_events)
+        evalj, ex, ey = self._eval_pair(eval_fn, eval_batch)
+
+        k_fleet = self.problem.num_learners
+        feat = train.x.shape[1]
+        dispatch_params = [self.params] * k_fleet
+        pending: list = []          # trained locals of the open buffer group
+        group: list[_Arrival] = []
+        history: list[dict] = []
+        lr = jnp.asarray(self.cfg.lr, jnp.float32)
+
+        for ev in sched.arrivals:
+            if ev.flush_id < 0:
+                # trailing buffered arrival whose group never flushes
+                # within the horizon: its local model is unobservable, so
+                # skip the training (the redispatch model is the unchanged
+                # server either way)
+                dispatch_params[ev.learner] = self.params
+                continue
+            # pad to the schedule-wide (d_cap, max_tau) so every event hits
+            # ONE local_train compilation (and the same masked-scan numerics
+            # as the bucketed path)
+            x = np.zeros((1, sched.d_cap, feat), np.float32)
+            y = np.zeros((1, sched.d_cap), np.int32)
+            msk = np.zeros((1, sched.d_cap), np.float32)
+            x[0, : ev.d] = train.x[ev.idx]
+            y[0, : ev.d] = train.y[ev.idx]
+            msk[0, : ev.d] = 1.0
+            out = local_train(
+                dispatch_params[ev.learner], jnp.asarray(x), jnp.asarray(y),
+                jnp.asarray(msk), jnp.asarray([ev.tau], jnp.int32), lr,
+                max_tau=sched.max_tau, loss_fn=self.loss_fn,
+            )
+            pending.append(jax.tree_util.tree_map(lambda l: l[0], out))
+            group.append(ev)
+            if ev.flush:
+                models = [self.params] + pending
+                stacked = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), *models
+                )
+                wvec = np.concatenate([[ev.keep], ev.group_weights])
+                self.params = aggregate(
+                    stacked, jnp.asarray(wvec, jnp.float32)
+                )
+                rec = self._flush_row(ev, group)
+                if evalj is not None:
+                    rec["accuracy"] = float(evalj(self.params, ex, ey))
+                history.append(rec)
+                pending, group = [], []
+            dispatch_params[ev.learner] = self.params
+        return history
+
+    # -- barrier (paper-scheme) rounds --------------------------------------
+    def _run_barrier(self, train, *, horizon, cycles, eval_fn, eval_batch):
+        prob, cfg = self.problem, self.cfg
+        if cycles is None:
+            if horizon is None:
+                raise ValueError("barrier mode needs cycles or horizon")
+            cycles = int(np.floor(horizon / prob.T + 1e-9))
+        part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
+        evalj, ex, ey = self._eval_pair(eval_fn, eval_batch)
+        # without drift, per-cycle re-solves would repeat the static solve
+        rows = (self._block_rows(cycles)
+                if cfg.reallocate and self.drift is not None else None)
+        feat = train.x.shape[1]
+        history = []
+        for c in range(cycles):
+            if rows is not None:
+                tau, d = self._alloc_for_block(c, rows)
+            else:
+                tau = np.asarray(self.allocation.tau)
+                d = np.asarray(self.allocation.d)
+            shards = part.draw(d)
+            x, y, msk = _stage_shards(shards, int(d.max()), feat)
+            locals_ = local_train(
+                self.params, jnp.asarray(x), jnp.asarray(y), jnp.asarray(msk),
+                jnp.asarray(tau), jnp.asarray(cfg.lr, jnp.float32),
+                max_tau=max(int(tau.max()), 1), loss_fn=self.loss_fn,
+            )
+            if cfg.aggregation == "staleness":
+                w = staleness_weights(tau, d, gamma=cfg.staleness_gamma)
+            else:
+                w = fedavg_weights(d)
+            # all versions are equal under the barrier, so the version
+            # discount is exactly 1.0 for every learner and the weights
+            # reduce to the orchestrator's (bitwise — no factor applied)
+            self.params = aggregate(locals_, jnp.asarray(w))
+            rec = {
+                "event": c,
+                "t": (c + 1) * prob.T,
+                "mode": "cycle",
+                "server_version": c + 1,
+                "learners": list(range(prob.num_learners)),
+                "tau": tau.copy(),
+                "d": d.copy(),
+                "staleness_list": [0] * prob.num_learners,
+                "version_staleness_max": 0,
+                "version_staleness_mean": 0.0,
+                "weights": np.asarray(w, np.float64),
+                "keep": 0.0,
+                "max_staleness": max_staleness(tau),
+                "avg_staleness": avg_staleness(tau),
+                "cycle": c,
+                "elapsed_s": (c + 1) * prob.T,
+                "wall_clock_s": prob.T,
+            }
+            if evalj is not None:
+                rec["accuracy"] = float(evalj(self.params, ex, ey))
+            history.append(rec)
+        return history
+
+    # -- bucketed device-resident fast path ----------------------------------
+    def run_bucketed(
+        self,
+        train: Dataset,
+        horizon: float,
+        num_buckets: int,
+        *,
+        eval_fn=None,
+        eval_batch=None,
+        strict: bool = True,
+        use_pallas: bool = False,
+        interpret: bool = False,
+        max_events: int = 100_000,
+    ) -> list[dict]:
+        """The eager event loop as ONE jitted ``lax.scan`` over a
+        ``num_buckets`` time grid (see module docstring). History rows are
+        identical to ``run``'s for the same seed (same host schedule); the
+        aggregation sequence matches to float tolerance whenever each
+        bucket holds at most one arrival — the guards below raise (with a
+        remedy) for grids too coarse to be faithful at all."""
+        if self.cfg.barrier:
+            raise ValueError(
+                "the barrier (cycle-gated) regime is already one XLA "
+                "program via Orchestrator.run_fused; run_bucketed is the "
+                "event-driven fast path"
+            )
+        if num_buckets < 1:
+            raise ValueError("num_buckets must be >= 1")
+        part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
+        sched = self._build_schedule(part, horizon, max_events)
+        evalj = eval_fn  # traced inside the scan; no separate jit wrapper
+        if eval_fn is not None and eval_batch is None:
+            raise ValueError("eval_fn needs eval_batch=(x, y)")
+
+        h = num_buckets
+        k_fleet = self.problem.num_learners
+        feat = train.x.shape[1]
+        width = horizon / h
+        buckets: list[list[_Arrival]] = [[] for _ in range(h)]
+        for a in sched.arrivals:
+            if a.flush_id < 0:
+                continue   # never-flushed trailing buffer: unobservable
+            buckets[min(int(a.t / width), h - 1)].append(a)
+
+        # guards: configurations the grid cannot represent at all
+        for b, evs in enumerate(buckets):
+            learners = [a.learner for a in evs]
+            if len(set(learners)) < len(learners):
+                raise ValueError(
+                    f"bucket {b} holds two arrivals of the same learner — "
+                    "its second task would need training before the bucket "
+                    "ends; increase num_buckets"
+                )
+            if strict and len(evs) > 1:
+                raise ValueError(
+                    f"bucket {b} holds {len(evs)} arrivals; increase "
+                    "num_buckets for an exact replay, or pass strict=False "
+                    "to merge them (exact aggregation via composed weights; "
+                    "mid-bucket redispatches then see the bucket-end server)"
+                )
+            if self.cfg.mode == "buffered":
+                # fedasync flushes per arrival and merges exactly via the
+                # composed weights below; buffered groups cannot straddle a
+                # bucket boundary mid-bucket
+                tie = len({a.t for a in evs}) < len(evs)
+                remedy = (
+                    "arrival times tie exactly, so NO grid separates them "
+                    "— this buffered schedule is unrepresentable on a "
+                    "time-bucket grid (use the eager run)"
+                    if tie else "increase num_buckets"
+                )
+                nflush = sum(a.flush for a in evs)
+                if nflush > 1:
+                    raise ValueError(
+                        f"bucket {b} holds {nflush} buffer flushes; {remedy}"
+                    )
+                if nflush == 1 and not evs[-1].flush:
+                    raise ValueError(
+                        f"a buffer flush splits bucket {b} (arrivals of "
+                        f"the next group share it); {remedy}"
+                    )
+
+        # host-composed per-bucket tensors
+        d_cap, max_tau = sched.d_cap, sched.max_tau
+        xs = np.zeros((h, k_fleet, d_cap, feat), np.float32)
+        ys = np.zeros((h, k_fleet, d_cap), np.int32)
+        ms = np.zeros((h, k_fleet, d_cap), np.float32)
+        tau_g = np.zeros((h, k_fleet), np.int32)
+        wc = np.zeros((h, k_fleet), np.float32)
+        keepv = np.ones(h, np.float32)
+        fflag = np.zeros(h, np.float32)
+        rmask = np.zeros((h, k_fleet), bool)
+        for b, evs in enumerate(buckets):
+            if not evs:
+                continue
+            if self.cfg.mode == "fedasync":
+                # sequential mixes composed into one contraction:
+                # server' = prod(1-b_i) * server + sum_i b_i prod_{j>i}(1-b_j) w_i
+                betas = np.array([a.weight for a in evs])
+                suffix = np.cumprod((1.0 - betas)[::-1])[::-1]
+                keepv[b] = float(suffix[0])
+                comp = betas * np.concatenate([suffix[1:], [1.0]])
+                for a, w_i in zip(evs, comp):
+                    wc[b, a.learner] = w_i
+                fflag[b] = 1.0
+            else:
+                for a in evs:
+                    wc[b, a.learner] = a.weight
+                if evs[-1].flush:
+                    fflag[b] = 1.0
+                    keepv[b] = evs[-1].keep
+            for a in evs:
+                k = a.learner
+                rmask[b, k] = True
+                tau_g[b, k] = a.tau
+                xs[b, k, : a.d] = train.x[a.idx]
+                ys[b, k, : a.d] = train.y[a.idx]
+                ms[b, k, : a.d] = 1.0
+
+        ex = jnp.asarray(eval_batch[0]) if eval_fn is not None else None
+        ey = jnp.asarray(eval_batch[1]) if eval_fn is not None else None
+        disp0 = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p, (k_fleet,) + p.shape),
+            self.params,
+        )
+        accum0 = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        self.params, accs = _bucketed_events(
+            self.params, disp0, accum0, jnp.asarray(xs), jnp.asarray(ys),
+            jnp.asarray(ms), jnp.asarray(tau_g), jnp.asarray(wc),
+            jnp.asarray(keepv), jnp.asarray(fflag),
+            jnp.asarray(rmask), jnp.asarray(self.cfg.lr, jnp.float32), ex, ey,
+            max_tau=max_tau, loss_fn=self.loss_fn, eval_fn=evalj,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        accs = np.asarray(accs)
+
+        history: list[dict] = []
+        group: list[_Arrival] = []
+        for b, evs in enumerate(buckets):
+            flushes = [a for a in evs if a.flush]
+            for a in evs:
+                group.append(a)
+                if a.flush:
+                    rec = self._flush_row(a, group)
+                    # accs[b] is the post-BUCKET accuracy: when strict=False
+                    # merges several flushes into one bucket, attribute it
+                    # only to the last one (earlier rows have no mid-bucket
+                    # eval point)
+                    if eval_fn is not None and a is flushes[-1]:
+                        rec["accuracy"] = float(accs[b])
+                    history.append(rec)
+                    group = []
+        return history
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_tau", "loss_fn", "eval_fn", "use_pallas", "interpret"),
+)
+def _bucketed_events(server, disp, accum, xs, ys, ms, taus, wcs, keeps, fs,
+                     rmask, lr, eval_x, eval_y, *, max_tau: int, loss_fn,
+                     eval_fn, use_pallas: bool, interpret: bool):
+    """One XLA program for H time buckets of the async event system:
+    scan(train carried dispatch models -> fold arrivals into the weighted
+    accumulator -> masked flush into the server -> masked redispatch). The
+    initial server buffer is NOT donated on purpose: engines may share the
+    caller's init_params object (the scan carry is double-buffered by XLA
+    either way).
+
+    xs: (H, K, d_cap, F); ys/ms: (H, K, d_cap); taus/wcs: (H, K);
+    keeps/fs: (H,); rmask: (H, K) bool. Per bucket the server update is the
+    ``ops.fed_agg`` contraction  server' = fed_agg([server, A'], [keep, f])
+    with A' = fed_agg([A, locals], [1, w_c]) — f = 0 buckets leave the
+    server untouched, f = 1 buckets apply a flush whose coefficients the
+    host composed to be exactly the eager loop's sequential mixes."""
+    from repro.kernels import ops
+
+    def one_bucket(carry, inp):
+        x, y, m, tau, w, keep, f, rm = inp
+
+        def process(op):
+            server, dp, acc = op
+            locals_ = local_train_stacked(
+                dp, x, y, m, tau, lr, max_tau=max_tau, loss_fn=loss_fn
+            )
+            one = jnp.ones((1,), jnp.float32)
+            acc1 = jax.tree_util.tree_map(
+                lambda a, l: ops.fed_agg(
+                    jnp.concatenate([a[None], l], axis=0),
+                    jnp.concatenate([one, w]),
+                    use_pallas=use_pallas, interpret=interpret,
+                ),
+                acc, locals_,
+            )
+            w2 = jnp.stack([keep, f])
+            server1 = jax.tree_util.tree_map(
+                lambda s, a: ops.fed_agg(
+                    jnp.stack([s, a]), w2, use_pallas=use_pallas,
+                    interpret=interpret,
+                ),
+                server, acc1,
+            )
+            acc2 = jax.tree_util.tree_map(lambda a: (1.0 - f) * a, acc1)
+            dp1 = jax.tree_util.tree_map(
+                lambda old, new: jnp.where(
+                    rm.reshape((-1,) + (1,) * (new.ndim)), new[None], old
+                ),
+                dp, server1,
+            )
+            # only flush buckets' accuracies are ever read back (buffered
+            # accumulation buckets would be dead eval compute)
+            a_out = (
+                jax.lax.cond(
+                    f > 0,
+                    lambda s: eval_fn(s, eval_x, eval_y).astype(jnp.float32),
+                    lambda s: jnp.float32(0),
+                    server1,
+                )
+                if eval_fn is not None else jnp.float32(0)
+            )
+            return (server1, dp1, acc2), a_out
+
+        def skip(op):
+            return op, jnp.float32(0)
+
+        # empty buckets skip training entirely at RUNTIME (scan-level cond
+        # is real branching, not a select) — a fine exact grid costs only
+        # its active buckets
+        return jax.lax.cond(jnp.any(rm), process, skip, carry)
+
+    (server, disp, accum), accs = jax.lax.scan(
+        one_bucket, (server, disp, accum), (xs, ys, ms, taus, wcs, keeps, fs,
+                                            rmask)
+    )
+    return server, accs
+
+
+def summarize_async_history(history: list[dict]) -> dict:
+    """Fleet-level summary of an async run: the version-staleness profile
+    over all aggregated uploads plus aggregation counts and the virtual
+    time span. Barrier (cycle) rows carry zero version staleness by
+    construction."""
+    stal: list[int] = []
+    for rec in history:
+        stal.extend(rec.get("staleness_list", [0] * len(rec["learners"])))
+    return {
+        "aggregations": len(history),
+        "uploads": int(sum(len(r["learners"]) for r in history)),
+        "virtual_time": float(history[-1]["t"]) if history else 0.0,
+        "staleness": version_staleness_profile(np.asarray(stal)),
+        "final_accuracy": history[-1].get("accuracy") if history else None,
+    }

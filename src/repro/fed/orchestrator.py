@@ -34,7 +34,12 @@ re-solve happens *inside* the scan — ``core.solver_batched.batched_policy``
 (KKT water-filling + SAI, equal-task eta, or masked PGD, per
 ``MELConfig.scheme``) runs on the traced (1, K) capacity state each cycle,
 so a fleet-scale run with per-cycle reallocation is still ONE XLA program
-with zero per-cycle host round-trips. Shards are pre-drawn flat (the
+with zero per-cycle host round-trips. The drifted capacity rows themselves
+are generated inside the scan — ``CapacityDrift.factors_at`` on the traced
+cycle index — so no host-precomputed coefficient path enters the program
+(the eager twin still materializes ``coefficient_path`` host-side; the two
+contexts agree on the f32 factors to 1 ULP and on the resulting integer
+tau/d exactly, pinned by the equivalence tests). Shards are pre-drawn flat (the
 partitioner's rng consumption depends only on the constant per-cycle
 total) and split by the traced d inside the scan, so for the same seed the
 tau/d history and the per-learner shard contents match the eager
@@ -72,7 +77,7 @@ from repro.core import (
 from repro.core.staleness import avg_staleness, max_staleness
 from repro.data.pipeline import Dataset, FederatedPartitioner
 
-__all__ = ["MELConfig", "Orchestrator", "local_train"]
+__all__ = ["MELConfig", "Orchestrator", "local_train", "local_train_stacked"]
 
 SCHEMES: dict[str, Callable[[AllocationProblem], Allocation]] = {
     "kkt_sai": solve_kkt_sai,
@@ -96,8 +101,11 @@ class MELConfig:
 
 
 @functools.partial(jax.jit, static_argnames=("max_tau", "loss_fn"))
-def local_train(global_params, x, y, mask, tau, lr, *, max_tau: int, loss_fn):
-    """Run tau_k local GD updates on each of K learners, vectorized.
+def local_train_stacked(stacked, x, y, mask, tau, lr, *, max_tau: int, loss_fn):
+    """Run tau_k local GD updates on each of K learners, vectorized, where
+    every learner starts from its OWN params (leading K axis on each leaf) —
+    the general form the event-driven async engine needs, since in-flight
+    learners hold different dispatched model versions.
 
     x: (K, d_max, F); y, mask: (K, d_max); tau: (K,) int32.
     Returns stacked per-learner params (leading K axis).
@@ -116,11 +124,19 @@ def local_train(global_params, x, y, mask, tau, lr, *, max_tau: int, loss_fn):
         p, _ = jax.lax.scan(step, params, jnp.arange(max_tau))
         return p
 
+    return jax.vmap(one_learner)(stacked, x, y, mask, tau)
+
+
+def local_train(global_params, x, y, mask, tau, lr, *, max_tau: int, loss_fn):
+    """``local_train_stacked`` with every learner starting from the same
+    global model (the paper's cycle-gated dispatch)."""
     k = x.shape[0]
     stacked = jax.tree_util.tree_map(
         lambda p: jnp.broadcast_to(p, (k,) + p.shape), global_params
     )
-    return jax.vmap(one_learner)(stacked, x, y, mask, tau)
+    return local_train_stacked(
+        stacked, x, y, mask, tau, lr, max_tau=max_tau, loss_fn=loss_fn
+    )
 
 
 def _stage_shards(shards: "list[Dataset]", d_max: int, feat: int):
@@ -201,8 +217,64 @@ def _local_train_dynamic(params, x, y, mask, tau, lr, *, loss_fn):
 def _jitted_policy(scheme: str):
     """One jitted wrapper per scheme so per-cycle eager re-solves hit the
     same compilation cache (the fused path inlines the identical traced
-    policy inside its scan)."""
+    policy inside its scan, and ``fed.async_engine`` re-solves through the
+    same wrapper at every redispatch)."""
     return jax.jit(batched_policy(scheme))
+
+
+def policy_problem_args(prob: AllocationProblem):
+    """Static (1,)/(1, K) f64 problem tensors for a single-fleet call into a
+    ``batched_policy`` — shared by the orchestrator's re-solves and the
+    async engine's per-block allocation so all consumers see identical
+    values."""
+    k = prob.num_learners
+    return (
+        np.asarray([prob.T], np.float64),
+        np.asarray([prob.total_samples], np.int64),
+        np.full((1, k), float(prob.d_lower), np.float64),
+        np.full((1, k), float(prob.d_upper), np.float64),
+        np.ones((1, k), bool),
+    )
+
+
+def coefficient_rows(prob: AllocationProblem, drift: CapacityDrift | None,
+                     cycles: int):
+    """(C, K) f64 capacity rows per global cycle / drift block — drifted
+    when a CapacityDrift is attached, else the base coefficients tiled.
+    THE shared row source for the orchestrator's eager re-solves and the
+    async engine's schedule (their bitwise equivalence depends on it)."""
+    tm = prob.time_model
+    if drift is None:
+        tile = lambda a: np.broadcast_to(
+            a, (cycles, tm.num_learners)
+        ).astype(np.float64)
+        return tile(tm.c2), tile(tm.c1), tile(tm.c0)
+    return drift.coefficient_path(tm, cycles)
+
+
+def solve_policy_row(scheme: str, c2r, c1r, c0r, prob: AllocationProblem,
+                     *, label: str) -> tuple[np.ndarray, np.ndarray]:
+    """One fleet's (tau, d) on a single (K,) capacity row through the
+    jitted traced policy, f64 under ``enable_x64`` — THE single-row solve
+    shared by the orchestrator's eager per-cycle re-solve and the async
+    engine's per-block allocation (the barrier-equivalence guarantee
+    depends on both paths using this exact code). Raises ValueError with
+    ``label`` naming the infeasible capacity state."""
+    policy = _jitted_policy(scheme)
+    T1, total1, lo1, hi1, valid1 = policy_problem_args(prob)
+    with enable_x64():
+        tau, d, ok = policy(
+            jnp.asarray(c2r[None]), jnp.asarray(c1r[None]),
+            jnp.asarray(c0r[None]), jnp.asarray(T1), jnp.asarray(total1),
+            jnp.asarray(lo1), jnp.asarray(hi1), jnp.asarray(valid1),
+        )
+        tau = np.asarray(tau[0]); d = np.asarray(d[0]); ok = bool(ok[0])
+    if not ok:
+        raise ValueError(
+            "infeasible: even with tau=0 the deadline T cannot absorb "
+            f"d samples ({label})"
+        )
+    return tau.astype(np.int64), d.astype(np.int64)
 
 
 def _weights_traced(tau, d, *, aggregation: str, gamma):
@@ -220,27 +292,43 @@ def _weights_traced(tau, d, *, aggregation: str, gamma):
 @functools.partial(
     jax.jit,
     static_argnames=("d_cap", "loss_fn", "eval_fn", "policy",
-                     "aggregation", "use_pallas", "interpret"),
+                     "aggregation", "drift", "use_pallas", "interpret"),
     donate_argnums=(0,),
 )
-def _fused_realloc_cycles(params, xs, ys, c2s, c1s, c0s, T1, total1, lo1, hi1,
+def _fused_realloc_cycles(params, xs, ys, c2b, c1b, c0b, T1, total1, lo1, hi1,
                           valid1, gamma, lr, eval_x, eval_y, *,
                           d_cap: int, loss_fn, eval_fn, policy,
-                          aggregation: str, use_pallas: bool, interpret: bool):
+                          aggregation: str, drift: CapacityDrift | None,
+                          use_pallas: bool, interpret: bool):
     """One XLA program for C global cycles WITH per-cycle reallocation:
-    scan(policy-solve on traced capacities -> shard split by traced d ->
-    dynamic local_train -> fed_agg). xs: (C, total, F) flat per-cycle
-    sample tensors; c2s/c1s/c0s: (C, K) f64 drifted capacity rows;
-    T1/total1: (1,); lo1/hi1/valid1: (1, K). Must run under ``enable_x64``
-    so the allocation math stays f64 while training stays f32."""
+    scan(drift capacities at the traced cycle index -> policy-solve ->
+    shard split by traced d -> dynamic local_train -> fed_agg).
+    xs: (C, total, F) flat per-cycle sample tensors; c2b/c1b/c0b: (1, K)
+    f64 BASE capacity rows — the per-cycle drifted rows are generated
+    INSIDE the scan by ``drift.factors_at`` on the traced cycle index (no
+    host-precomputed coefficient path enters the program), which is what
+    lets a future state-dependent drift read the scan carry; ``drift=None``
+    runs the static-capacity rows as-is. T1/total1: (1,); lo1/hi1/valid1:
+    (1, K). Must run under ``enable_x64`` so the allocation math stays f64
+    while training stays f32 (drift draws are f32-pinned either way, so the
+    traced rows track ``CapacityDrift.coefficient_path`` to 1 f32 ULP and
+    yield the same integer allocations)."""
     from repro.kernels import ops
 
     total = xs.shape[1]
+    k = c2b.shape[1]
 
     def one_cycle(p, inp):
-        x_flat, y_flat, c2, c1, c0 = inp
+        x_flat, y_flat, cyc = inp
+        if drift is None:
+            c2, c1, c0 = c2b, c1b, c0b
+        else:
+            clock, rate = drift.factors_at(cyc, k)
+            c2 = c2b / clock.astype(c2b.dtype)[None]
+            c1 = c1b / rate.astype(c1b.dtype)[None]
+            c0 = c0b / rate.astype(c0b.dtype)[None]
         tau_b, d_b, feas_b = policy(
-            c2[None], c1[None], c0[None], T1, total1, lo1, hi1, valid1
+            c2, c1, c0, T1, total1, lo1, hi1, valid1
         )
         tau, d, feas = tau_b[0], d_b[0], feas_b[0]
         w = _weights_traced(tau, d, aggregation=aggregation, gamma=gamma)
@@ -267,7 +355,8 @@ def _fused_realloc_cycles(params, xs, ys, c2s, c1s, c0s, T1, total1, lo1, hi1,
         acc = eval_fn(new, eval_x, eval_y) if eval_fn is not None else jnp.float32(0)
         return new, (acc, tau, d, feas)
 
-    return jax.lax.scan(one_cycle, params, (xs, ys, c2s, c1s, c0s))
+    cycle_idx = jnp.arange(xs.shape[0])
+    return jax.lax.scan(one_cycle, params, (xs, ys, cycle_idx))
 
 
 class Orchestrator:
@@ -293,24 +382,12 @@ class Orchestrator:
     def _coefficient_path(self, cycles: int):
         """(C, K) f64 capacity rows — drifted when a CapacityDrift is
         attached, else the base coefficients tiled (static capacities)."""
-        tm = self.problem.time_model
-        if self.drift is None:
-            tile = lambda a: np.broadcast_to(a, (cycles, tm.num_learners)).astype(np.float64)
-            return tile(tm.c2), tile(tm.c1), tile(tm.c0)
-        return self.drift.coefficient_path(tm, cycles)
+        return coefficient_rows(self.problem, self.drift, cycles)
 
     def _policy_args(self):
         """Static (1,)/(1, K) f64 problem tensors shared by every per-cycle
         re-solve (eager and in-scan paths consume identical values)."""
-        prob = self.problem
-        k = prob.num_learners
-        return (
-            np.asarray([prob.T], np.float64),
-            np.asarray([prob.total_samples], np.int64),
-            np.full((1, k), float(prob.d_lower), np.float64),
-            np.full((1, k), float(prob.d_upper), np.float64),
-            np.ones((1, k), bool),
-        )
+        return policy_problem_args(self.problem)
 
     def _reallocate_cycle(self, coeff_path, c: int) -> Allocation:
         """Eager per-cycle re-solve on cycle c's capacity row (drifted or
@@ -318,25 +395,11 @@ class Orchestrator:
         inlines (bitwise-identical tau/d between the two paths under
         x64)."""
         c2s, c1s, c0s = coeff_path
-        policy = _jitted_policy(self.mel.scheme)
-        T1, total1, lo1, hi1, valid1 = self._policy_args()
-        with enable_x64():
-            tau, d, ok = policy(
-                jnp.asarray(c2s[c][None]), jnp.asarray(c1s[c][None]),
-                jnp.asarray(c0s[c][None]), jnp.asarray(T1),
-                jnp.asarray(total1), jnp.asarray(lo1), jnp.asarray(hi1),
-                jnp.asarray(valid1),
-            )
-            tau = np.asarray(tau[0]); d = np.asarray(d[0]); ok = bool(ok[0])
-        if not ok:
-            raise ValueError(
-                "infeasible: even with tau=0 the deadline T cannot absorb "
-                f"d samples (drifted capacities at cycle {c})"
-            )
-        return Allocation(
-            tau=tau.astype(np.int64), d=d.astype(np.int64),
-            method=f"{self.mel.scheme}_drift",
+        tau, d = solve_policy_row(
+            self.mel.scheme, c2s[c], c1s[c], c0s[c], self.problem,
+            label=f"drifted capacities at cycle {c}",
         )
+        return Allocation(tau=tau, d=d, method=f"{self.mel.scheme}_drift")
 
     # -- one global cycle ---------------------------------------------------
     def run_cycle(self, shards: list[Dataset]) -> dict:
@@ -526,14 +589,21 @@ class Orchestrator:
             raise ValueError(f"unknown aggregation {self.mel.aggregation!r}")
         total = prob.total_samples
         feat = train.x.shape[1]
-        c2s, c1s, c0s = self._coefficient_path(cycles)
         T1, total1, lo1, hi1, valid1 = self._policy_args()
+        tm = prob.time_model
+        c2b = np.asarray(tm.c2[None], np.float64)
+        c1b = np.asarray(tm.c1[None], np.float64)
+        c0b = np.asarray(tm.c0[None], np.float64)
 
         # fail fast on an infeasible drifted cycle (same residual-at-zero
         # criterion the in-scan policy applies) BEFORE the scan trains
         # through neutralized allocations and the params buffer is donated;
         # the post-scan feasibility flags stay as a backstop for integer
-        # repair failures the relaxed test cannot see.
+        # repair failures the relaxed test cannot see. This host replay of
+        # the drift path (cheap scalar math) is the only remaining
+        # coefficient_path consumer on the fused route — the scan itself
+        # regenerates the rows from ``factors_at`` on the traced index.
+        c2s, c1s, c0s = self._coefficient_path(cycles)
         with np.errstate(divide="ignore", invalid="ignore"):
             absorb = np.clip(
                 (prob.T - c0s) / c1s, float(prob.d_lower), float(prob.d_upper)
@@ -567,15 +637,15 @@ class Orchestrator:
         with enable_x64():
             self.params, (accs, taus, ds, feas) = _fused_realloc_cycles(
                 self.params, jnp.asarray(xs), jnp.asarray(ys),
-                jnp.asarray(c2s), jnp.asarray(c1s), jnp.asarray(c0s),
+                jnp.asarray(c2b), jnp.asarray(c1b), jnp.asarray(c0b),
                 jnp.asarray(T1), jnp.asarray(total1), jnp.asarray(lo1),
                 jnp.asarray(hi1), jnp.asarray(valid1),
                 jnp.asarray(self.mel.staleness_gamma, jnp.float64),
                 jnp.asarray(self.mel.lr, jnp.float32), ex, ey,
                 d_cap=d_cap, loss_fn=self.loss_fn,
                 eval_fn=eval_fn, policy=policy,
-                aggregation=self.mel.aggregation, use_pallas=use_pallas,
-                interpret=interpret,
+                aggregation=self.mel.aggregation, drift=self.drift,
+                use_pallas=use_pallas, interpret=interpret,
             )
             accs, taus, ds, feas = (np.asarray(a) for a in (accs, taus, ds, feas))
         if not feas.all():

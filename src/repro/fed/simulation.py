@@ -32,7 +32,15 @@ from repro.data.pipeline import Dataset, synthetic_mnist
 from repro.fed.orchestrator import MELConfig, Orchestrator, SCHEMES
 from repro.models import mlp
 
-__all__ = ["build_problem", "run_experiment", "staleness_sweep", "drift_staleness_sweep"]
+__all__ = [
+    "build_problem",
+    "build_spread_problem",
+    "run_experiment",
+    "staleness_sweep",
+    "drift_staleness_sweep",
+    "run_async_experiment",
+    "async_mode_sweep",
+]
 
 
 def build_problem(
@@ -55,6 +63,29 @@ def build_problem(
     d_u = min(total_samples, int(d_upper_frac * total_samples / k))
     return AllocationProblem(
         time_model=tm, T=T, total_samples=total_samples, d_lower=d_l, d_upper=d_u
+    )
+
+
+def build_spread_problem(
+    k: int = 3, T: float = 6.0, *, total_samples: int = 60,
+) -> AllocationProblem:
+    """A small (K <= 5) fleet whose integer-rounded cycle times land well
+    apart — the regime where the async engine's exact bucket grid stays
+    small and local training stays cheap. The KKT allocator equalizes
+    *relaxed* finish times, so the spread comes from the integer tau
+    rounding: the coefficients are hand-picked to make that slack differ
+    per learner. Shared by the async tests and ``benchmarks/async_bench``
+    so the spread property is tuned in one place."""
+    if not (1 <= k <= 5):
+        raise ValueError("the hand-tuned spread fleet has at most 5 learners")
+    c2 = np.array([0.050, 0.031, 0.022, 0.045, 0.027])[:k]
+    c1 = np.array([0.004, 0.006, 0.003, 0.005, 0.002])[:k]
+    c0 = np.array([0.40, 0.55, 0.30, 0.25, 0.45])[:k]
+    return AllocationProblem(
+        time_model=TimeModel(c2=c2, c1=c1, c0=c0), T=T,
+        total_samples=total_samples,
+        d_lower=max(1, total_samples // (2 * k)),
+        d_upper=min(total_samples, 2 * total_samples // k),
     )
 
 
@@ -311,3 +342,173 @@ def _acc_jit(params, x, y):
 
 def _accuracy(params, *, x, y):
     return _acc_jit(params, x, y)
+
+
+# ---------------------------------------------------------------------------
+# event-driven asynchronous federation (fed.async_engine)
+# ---------------------------------------------------------------------------
+
+def run_async_experiment(
+    *,
+    k: int = 6,
+    T: float = 10.0,
+    cycles: int = 6,
+    mode: str = "fedasync",
+    scheme: str = "kkt_sai",
+    aggregation: str = "staleness",
+    total_samples: int = 2000,
+    lr: float = 0.1,
+    seed: int = 0,
+    drift: CapacityDrift | None = None,
+    reallocate: bool = False,
+    alpha: float = 0.6,
+    staleness_fn: str = "poly",
+    buffer_size: int = 0,
+    bucketed: bool = False,
+    num_buckets: int = 0,
+    strict: bool = True,
+    train: Dataset | None = None,
+    test: Dataset | None = None,
+    problem=None,
+    max_events: int = 100_000,
+) -> dict:
+    """One event-driven async MEL run to virtual time ``cycles * T``.
+
+    ``mode`` selects the server: ``"cycle"`` is the paper's cycle-gated
+    scheme expressed as the engine's barrier regime (buffered, M = K, so
+    the three modes share one code path and one rng discipline),
+    ``"fedasync"`` mixes per upload with version-staleness discounting,
+    ``"buffered"`` flushes a size-M buffer (default M = K/2, min 2).
+    ``bucketed=True`` routes through the device-resident time-bucket scan
+    (event modes only; ``num_buckets=0`` asks the engine for the smallest
+    exact grid). Pass ``problem`` to override the default MNIST-constants
+    environment (``build_problem``) with a custom fleet.
+    """
+    from repro.fed.async_engine import (
+        AsyncConfig, AsyncFedEngine, summarize_async_history,
+    )
+
+    if problem is None:
+        problem = build_problem(k, T, total_samples=total_samples, seed=seed)
+    else:
+        k, T = problem.num_learners, problem.T
+        total_samples = problem.total_samples
+    # dataset sizing must see the RESOLVED per-cycle budget (a problem=
+    # override replaces total_samples above)
+    if train is None or test is None:
+        train, test = synthetic_mnist(max(total_samples * 2, 12_000), seed=seed)
+    horizon = cycles * T
+    common = dict(scheme=scheme, aggregation=aggregation, lr=lr,
+                  reallocate=reallocate)
+    if mode == "cycle":
+        cfg = AsyncConfig(mode="buffered", barrier=True, **common)
+    elif mode == "buffered":
+        cfg = AsyncConfig(
+            mode="buffered", alpha=alpha, staleness_fn=staleness_fn,
+            buffer_size=buffer_size or max(2, k // 2), **common,
+        )
+    else:
+        cfg = AsyncConfig(
+            mode=mode, alpha=alpha, staleness_fn=staleness_fn, **common
+        )
+    params = mlp.init(jax.random.key(seed))
+    eng = AsyncFedEngine(cfg, problem, mlp.loss, params, seed=seed, drift=drift)
+    eval_batch = (test.x[:2000], test.y[:2000])
+    if bucketed:
+        if mode == "cycle":
+            raise ValueError(
+                "mode='cycle' is the barrier regime: its one-XLA-program "
+                "path is Orchestrator.run_fused (run_experiment(fused="
+                "True)); bucketed=True applies to the event-driven modes"
+            )
+        nb = num_buckets or eng.suggest_num_buckets(
+            train, horizon, max_events=max_events
+        )
+        history = eng.run_bucketed(
+            train, horizon, nb, eval_fn=mlp.accuracy, eval_batch=eval_batch,
+            strict=strict, max_events=max_events,
+        )
+    else:
+        history = eng.run(
+            train, horizon, eval_fn=mlp.accuracy, eval_batch=eval_batch,
+            max_events=max_events,
+        )
+    summary = summarize_async_history(history)
+    return {
+        "mode": mode,
+        "scheme": scheme,
+        "K": k,
+        "T": T,
+        "cycles": cycles,
+        "bucketed": bucketed,
+        "history": history,
+        "summary": summary,
+        "final_accuracy": summary["final_accuracy"],
+        "accuracy_trace": [
+            (round(float(r["t"]), 3), round(float(r["accuracy"]), 4))
+            for r in history if "accuracy" in r
+        ],
+    }
+
+
+def async_mode_sweep(
+    ks,
+    T: float,
+    *,
+    cycles: int = 6,
+    modes=("cycle", "fedasync", "buffered"),
+    drift: CapacityDrift | None = None,
+    scheme: str = "kkt_sai",
+    seed: int = 0,
+    total_samples: int = 2000,
+    reallocate: bool = True,
+    alpha: float = 0.6,
+    staleness_fn: str = "poly",
+    problem=None,
+    train: Dataset | None = None,
+    test: Dataset | None = None,
+) -> list[dict]:
+    """Score the paper's cycle-gated scheme against FedAsync and buffered
+    asynchronous aggregation at EQUAL virtual time (``cycles * T`` seconds
+    of simulated wall clock) under time-varying capacities.
+
+    Every mode trains the same model on the same data stream discipline
+    and reports final accuracy, the version-staleness profile of its
+    aggregations, and the aggregation/upload counts — the async twin of
+    ``drift_staleness_sweep``. ``drift`` defaults to
+    ``CapacityDrift(seed=seed)``; pass ``reallocate=False`` to freeze
+    every mode's allocation at the base capacities instead.
+    """
+    drift = CapacityDrift(seed=seed) if drift is None else drift
+    rows: list[dict] = []
+    for k in np.atleast_1d(ks):
+        for mode in modes:
+            try:
+                res = run_async_experiment(
+                    k=int(k), T=T, cycles=cycles, mode=mode, scheme=scheme,
+                    seed=seed, total_samples=total_samples, drift=drift,
+                    reallocate=reallocate, alpha=alpha,
+                    staleness_fn=staleness_fn, problem=problem,
+                    train=train, test=test,
+                )
+            except ValueError as e:
+                rows.append({"K": int(k), "T": T, "mode": mode,
+                             "cycles": cycles, "error": str(e)})
+                continue
+            s = res["summary"]
+            rows.append({
+                "K": res["K"],      # a problem= override resolves K and T
+                "T": res["T"],
+                "mode": mode,
+                "cycles": cycles,
+                "scheme": scheme,
+                "reallocate": reallocate,
+                "final_accuracy": res["final_accuracy"],
+                "aggregations": s["aggregations"],
+                "uploads": s["uploads"],
+                "virtual_time": s["virtual_time"],
+                "staleness_mean": s["staleness"]["mean"],
+                "staleness_max": s["staleness"]["max"],
+                "accuracy_trace": res["accuracy_trace"][:40],
+            })
+    return rows

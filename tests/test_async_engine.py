@@ -1,0 +1,319 @@
+"""Event-driven asynchronous federation engine (fed.async_engine).
+
+Pins the acceptance contracts of the subsystem:
+  * buffered mode with M = K and a cycle barrier reproduces the paper-scheme
+    ``Orchestrator.run`` tau/d/staleness history (and params) exactly;
+  * the bucketed ``lax.scan`` fast path matches the eager event loop's
+    aggregation sequence to float tolerance;
+  * version staleness, the FedAsync discount functions, and the schedule's
+    virtual-clock bookkeeping behave as specified.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import AllocationProblem, CapacityDrift, TimeModel
+from repro.core.staleness import staleness_factor
+from repro.data.pipeline import synthetic_mnist
+from repro.fed.async_engine import (
+    AsyncConfig,
+    AsyncFedEngine,
+    summarize_async_history,
+)
+from repro.fed.orchestrator import MELConfig, Orchestrator
+from repro.fed.simulation import (
+    build_problem,
+    build_spread_problem as spread_problem,
+    run_async_experiment,
+)
+from repro.models import mlp
+
+
+@pytest.fixture(scope="module")
+def data():
+    return synthetic_mnist(3000, n_test=600, seed=0)
+
+
+def _assert_trees_equal(a, b, **kw):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if kw:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+        else:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# barrier regime == paper scheme
+# ---------------------------------------------------------------------------
+
+def test_buffered_barrier_matches_orchestrator(data):
+    """M = K + cycle barrier IS the paper's scheme: tau/d/staleness history
+    and the aggregated params match Orchestrator.run bitwise."""
+    train, _ = data
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    params = mlp.init(jax.random.key(3))
+
+    orch = Orchestrator(MELConfig(T=15.0, total_samples=1200), prob,
+                        mlp.loss, params, seed=3)
+    ho = orch.run(train, 3)
+    eng = AsyncFedEngine(AsyncConfig(mode="buffered", barrier=True), prob,
+                         mlp.loss, params, seed=3)
+    ha = eng.run(train, cycles=3)
+
+    assert len(ho) == len(ha) == 3
+    for ro, ra in zip(ho, ha):
+        np.testing.assert_array_equal(ro["tau"], ra["tau"])
+        np.testing.assert_array_equal(ro["d"], ra["d"])
+        assert ro["max_staleness"] == ra["max_staleness"]
+        assert ro["avg_staleness"] == ra["avg_staleness"]
+        assert ra["version_staleness_max"] == 0
+    _assert_trees_equal(orch.params, eng.params)
+
+
+def test_buffered_barrier_matches_orchestrator_under_drift(data):
+    """The equivalence holds with per-cycle reallocation under drift too
+    (same coefficient path, same traced policy re-solves)."""
+    train, _ = data
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    params = mlp.init(jax.random.key(3))
+    drift = CapacityDrift(clock_jitter=0.15, fading_sigma_db=2.0, seed=5)
+
+    orch = Orchestrator(MELConfig(T=15.0, total_samples=1200), prob,
+                        mlp.loss, params, seed=3, drift=drift)
+    ho = orch.run(train, 3, reallocate=True)
+    eng = AsyncFedEngine(
+        AsyncConfig(mode="buffered", barrier=True, reallocate=True), prob,
+        mlp.loss, params, seed=3, drift=drift,
+    )
+    ha = eng.run(train, cycles=3)
+    for ro, ra in zip(ho, ha):
+        np.testing.assert_array_equal(ro["tau"], ra["tau"])
+        np.testing.assert_array_equal(ro["d"], ra["d"])
+    _assert_trees_equal(orch.params, eng.params)
+
+
+def test_barrier_requires_full_buffer():
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(0))
+    with pytest.raises(ValueError, match="buffer_size == K"):
+        AsyncFedEngine(
+            AsyncConfig(mode="buffered", barrier=True, buffer_size=2),
+            prob, mlp.loss, params,
+        )
+    with pytest.raises(ValueError, match="cycle gate"):
+        AsyncConfig(mode="fedasync", barrier=True)
+
+
+# ---------------------------------------------------------------------------
+# event mode: schedule + staleness semantics
+# ---------------------------------------------------------------------------
+
+def test_fedasync_versions_and_staleness(data):
+    """Server version grows by one per arrival; staleness is the number of
+    aggregations that happened while the upload was in flight; the history
+    is ordered in virtual time within the horizon."""
+    train, _ = data
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(1))
+    eng = AsyncFedEngine(AsyncConfig(mode="fedasync", alpha=0.5), prob,
+                         mlp.loss, params, seed=2)
+    hist = eng.run(train, 18.0)
+    assert len(hist) >= 6
+    ts = [r["t"] for r in hist]
+    assert ts == sorted(ts) and ts[-1] <= 18.0
+    assert [r["server_version"] for r in hist] == list(range(1, len(hist) + 1))
+    # the first K arrivals were dispatched at version 0, so staleness
+    # equals the number of earlier arrivals
+    k = prob.num_learners
+    assert [r["staleness_list"][0] for r in hist[:k]] == list(range(k))
+    # the mixing weight is alpha * discount(staleness)
+    for r in hist:
+        s = r["staleness_list"][0]
+        beta = 0.5 * staleness_factor(s, kind="poly", a=0.5, b=4.0)
+        np.testing.assert_allclose(r["weights"][0], beta)
+        np.testing.assert_allclose(r["keep"], 1.0 - beta)
+    summ = summarize_async_history(hist)
+    assert summ["aggregations"] == len(hist)
+    assert summ["staleness"]["max"] >= 1
+
+
+def test_buffered_flush_weights_normalized(data):
+    train, _ = data
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(1))
+    eng = AsyncFedEngine(AsyncConfig(mode="buffered", buffer_size=2), prob,
+                         mlp.loss, params, seed=2)
+    hist = eng.run(train, 18.0)
+    assert len(hist) >= 2
+    for r in hist:
+        assert len(r["learners"]) == 2
+        np.testing.assert_allclose(r["weights"].sum(), 1.0)
+        assert r["keep"] == 0.0
+    # version bumps once per flush, not per upload
+    assert [r["server_version"] for r in hist] == list(range(1, len(hist) + 1))
+
+
+def test_async_engine_learns(data):
+    """Accuracy at the end of the virtual horizon beats the init model.
+    (lr kept moderate: GD on tiny shards is chaotic enough that XLA-CPU
+    thread-partitioning noise can fork trajectories run-to-run; at 0.05
+    every fork still learns.)"""
+    train, test = data
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(1))
+    eng = AsyncFedEngine(AsyncConfig(mode="fedasync", alpha=0.6, lr=0.05),
+                         prob, mlp.loss, params, seed=2)
+    hist = eng.run(train, 36.0, eval_fn=mlp.accuracy,
+                   eval_batch=(test.x, test.y))
+    acc0 = float(mlp.accuracy(params, test.x, test.y))
+    assert hist[-1]["accuracy"] > acc0 + 0.05
+
+
+def test_reallocate_composes_with_drift(data):
+    """Per-block re-solves through the batched policy react to drift: the
+    dispatched (tau, d) change across blocks."""
+    train, _ = data
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(1))
+    drift = CapacityDrift(clock_jitter=0.25, fading_sigma_db=3.0, seed=4)
+    eng = AsyncFedEngine(
+        AsyncConfig(mode="fedasync", reallocate=True), prob, mlp.loss,
+        params, seed=2, drift=drift,
+    )
+    hist = eng.run(train, 24.0)
+    taus = {tuple(map(int, r["tau"])) for r in hist}
+    ds = {tuple(map(int, r["d"])) for r in hist}
+    assert len(taus) > 1 or len(ds) > 1
+
+
+# ---------------------------------------------------------------------------
+# bucketed fast path == eager event loop
+# ---------------------------------------------------------------------------
+
+def test_bucketed_matches_eager_fedasync(data):
+    train, test = data
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(1))
+    cfg = AsyncConfig(mode="fedasync", alpha=0.6)
+
+    e1 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
+    h1 = e1.run(train, 18.0, eval_fn=mlp.accuracy,
+                eval_batch=(test.x[:400], test.y[:400]))
+    e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
+    nb = e2.suggest_num_buckets(train, 18.0)
+    h2 = e2.run_bucketed(train, 18.0, nb, eval_fn=mlp.accuracy,
+                         eval_batch=(test.x[:400], test.y[:400]))
+
+    # identical schedule: same aggregation sequence metadata
+    assert len(h1) == len(h2)
+    for r1, r2 in zip(h1, h2):
+        assert r1["learners"] == r2["learners"]
+        assert r1["staleness_list"] == r2["staleness_list"]
+        np.testing.assert_allclose(r1["weights"], r2["weights"])
+        np.testing.assert_array_equal(r1["tau"], r2["tau"])
+    # same aggregation VALUES to float tolerance
+    np.testing.assert_allclose(
+        [r["accuracy"] for r in h1], [r["accuracy"] for r in h2], atol=2e-3
+    )
+    _assert_trees_equal(e1.params, e2.params, atol=1e-5)
+
+
+def test_bucketed_matches_eager_buffered(data):
+    train, _ = data
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(1))
+    cfg = AsyncConfig(mode="buffered", buffer_size=2)
+
+    e1 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
+    h1 = e1.run(train, 18.0)
+    e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
+    h2 = e2.run_bucketed(train, 18.0, e2.suggest_num_buckets(train, 18.0))
+    assert [r["learners"] for r in h1] == [r["learners"] for r in h2]
+    _assert_trees_equal(e1.params, e2.params, atol=1e-5)
+
+
+def test_bucketed_guards(data):
+    """Grids too coarse to replay the schedule raise with a remedy instead
+    of silently diverging."""
+    train, _ = data
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(1))
+    eng = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
+                         params, seed=2)
+    # 1 bucket holds every learner's repeat arrivals
+    with pytest.raises(ValueError, match="increase num_buckets"):
+        eng.run_bucketed(train, 18.0, 1)
+    # barrier regime is served by Orchestrator.run_fused
+    ebar = AsyncFedEngine(AsyncConfig(mode="buffered", barrier=True), prob,
+                          mlp.loss, params, seed=2)
+    with pytest.raises(ValueError, match="run_fused"):
+        ebar.run_bucketed(train, 18.0, 64)
+
+
+def test_suggest_num_buckets_rejects_exact_ties(data):
+    """A homogeneous fleet completes all tasks at bitwise-identical times:
+    no grid separates them, and suggest_num_buckets must say so instead of
+    returning a grid the strict guards can never accept."""
+    train, _ = data
+    tm = TimeModel(c2=np.full(3, 0.04), c1=np.full(3, 0.004),
+                   c0=np.full(3, 0.4))
+    prob = AllocationProblem(time_model=tm, T=6.0, total_samples=60,
+                             d_lower=10, d_upper=40)
+    eng = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
+                         mlp.init(jax.random.key(0)), seed=0)
+    with pytest.raises(ValueError, match="tie EXACTLY"):
+        eng.suggest_num_buckets(train, 12.0)
+
+
+def test_bucketed_strict_false_merges_collisions(data):
+    """With strict=False, near-tie fedasync arrivals merge into one bucket
+    via sequentially-composed weights: every upload is still aggregated
+    exactly once with the schedule's staleness bookkeeping, and the merged
+    run still trains (the mid-bucket redispatch model is the documented
+    approximation, so parameter trajectories may drift from the eager
+    loop's — the per-flush metadata may not)."""
+    train, test = data
+    prob = spread_problem()
+    params = mlp.init(jax.random.key(1))
+    cfg = AsyncConfig(mode="fedasync", alpha=0.6)
+    e1 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
+    h1 = e1.run(train, 18.0)
+    e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
+    h2 = e2.run_bucketed(train, 18.0, 24, strict=False,
+                         eval_fn=mlp.accuracy, eval_batch=(test.x, test.y))
+    assert len(h1) == len(h2)
+    assert sum(len(r["learners"]) for r in h2) == len(h1)
+    for r1, r2 in zip(h1, h2):
+        assert r1["learners"] == r2["learners"]
+        assert r1["staleness_list"] == r2["staleness_list"]
+    acc0 = float(mlp.accuracy(params, test.x, test.y))
+    assert h2[-1]["accuracy"] > acc0
+    for leaf in jax.tree_util.tree_leaves(e2.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_run_async_experiment_modes(data):
+    """The simulation wiring drives all three modes on a custom fleet and
+    reports comparable summaries at equal virtual time."""
+    train, test = data
+    prob = spread_problem()
+    out = {}
+    for mode in ("cycle", "fedasync", "buffered"):
+        res = run_async_experiment(
+            mode=mode, cycles=3, problem=prob, train=train, test=test,
+            seed=2, buffer_size=2,
+        )
+        assert res["final_accuracy"] is not None
+        assert res["summary"]["virtual_time"] <= 3 * prob.T + 1e-9
+        out[mode] = res
+    # the cycle-gated scheme aggregates exactly once per cycle; the async
+    # servers aggregate more often within the same virtual time
+    assert out["cycle"]["summary"]["aggregations"] == 3
+    assert out["fedasync"]["summary"]["aggregations"] > 3
+    # version staleness exists only without the barrier
+    assert out["cycle"]["summary"]["staleness"]["max"] == 0
+    assert out["fedasync"]["summary"]["staleness"]["max"] >= 1
