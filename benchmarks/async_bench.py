@@ -6,11 +6,16 @@ Two sections, merged into ``BENCH_alloc.json``:
     aggregation at EQUAL virtual time under ``CapacityDrift`` (final
     accuracy, version-staleness profile, aggregation counts) on the
     MNIST-constants 802.11 fleet;
-  * ``engine`` — wall-time of the eager per-event loop vs the bucketed
-    ``lax.scan`` fast path on a spread-period fleet (the event schedule is
-    identical; the bucketed path trades masked dense per-bucket compute for
-    zero per-event host round-trips, so its CPU number is a lower bound on
-    the accelerator win, like the fused orchestrator's).
+  * ``engine`` — wall-time of the eager per-event loop vs the TWO
+    device-resident scan paths on the same schedule: the event-indexed
+    (jagged) ``run_events`` (exact on every schedule, one scan step per
+    flush group) and the legacy fixed-grid ``run_bucketed`` (needs a grid
+    that resolves individual arrivals). Measured on a spread-period fleet
+    (where the grid exists at all — near-tie fleets have no exact grid,
+    see the ``jagged_only`` row) — the scan paths trade masked dense
+    per-step compute for zero per-event host round-trips, so their CPU
+    numbers are a lower bound on the accelerator win, like the fused
+    orchestrator's.
 
   PYTHONPATH=src python -m benchmarks.run --only async
 """
@@ -39,7 +44,10 @@ def bench_modes(*, ks, T: float, cycles: int, total: int, seed: int = 0) -> list
 
 
 def bench_engine(*, horizon_cycles: int = 6, seed: int = 0) -> dict:
-    """Eager event loop vs bucketed scan: same schedule, same aggregations."""
+    """Eager event loop vs jagged (run_events) vs legacy grid
+    (run_bucketed): same schedule, same aggregations on all three."""
+    import warnings
+
     import jax
 
     from repro.data.pipeline import synthetic_mnist
@@ -58,31 +66,100 @@ def bench_engine(*, horizon_cycles: int = 6, seed: int = 0) -> dict:
         return eng, eng.run(train, horizon)
 
     probe = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
-    nb = probe.suggest_num_buckets(train, horizon)
+    with warnings.catch_warnings():
+        # the grid path is benchmarked deliberately (jagged-vs-grid rows)
+        warnings.simplefilter("ignore", DeprecationWarning)
+        nb = probe.suggest_num_buckets(train, horizon)
 
     def bucketed():
         eng = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
         return eng, eng.run_bucketed(train, horizon, nb)
 
-    _, h_warm = eager()       # compile + warmup both paths
+    def jagged():
+        eng = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
+        return eng, eng.run_events(train, horizon)
+
+    _, h_warm = eager()       # compile + warmup all paths
     bucketed()
+    _, h_j_warm = jagged()
     t0 = time.time()
     _, h_e = eager()
     eager_s = time.time() - t0
     t0 = time.time()
     _, h_b = bucketed()
     bucket_s = time.time() - t0
-    assert len(h_e) == len(h_b) == len(h_warm)
+    t0 = time.time()
+    _, h_j = jagged()
+    jagged_s = time.time() - t0
+    assert len(h_e) == len(h_b) == len(h_j) == len(h_warm)
     n = len(h_e)
     return {
         "K": prob.num_learners,
         "events": n,
         "num_buckets": nb,
+        "num_segments": len(h_j),   # fedasync: one scan step per arrival
         "eager_s": round(eager_s, 3),
         "bucketed_s": round(bucket_s, 3),
+        "jagged_s": round(jagged_s, 3),
         "eager_events_per_s": round(n / eager_s, 1),
         "bucketed_events_per_s": round(n / bucket_s, 1),
-        "speedup": round(eager_s / bucket_s, 2),
+        "jagged_events_per_s": round(n / jagged_s, 1),
+        "speedup_grid": round(eager_s / bucket_s, 2),
+        "speedup_jagged": round(eager_s / jagged_s, 2),
+    }
+
+
+def bench_engine_near_tie(*, horizon_cycles: int = 4, seed: int = 0) -> dict:
+    """The regime the grid cannot serve: a KKT near-tie fleet (capacity
+    spread ~1e-7) where ``suggest_num_buckets`` would need millions of
+    buckets. Only the eager loop and the jagged scan can replay it —
+    the ``jagged_only`` row records that plus their relative speed."""
+    import numpy as np
+
+    import jax
+
+    from repro.core import AllocationProblem, TimeModel
+    from repro.data.pipeline import synthetic_mnist
+    from repro.fed.async_engine import AsyncConfig, AsyncFedEngine
+    from repro.models import mlp
+
+    eps = np.array([0.0, 1e-7, 2.3e-7, 3.1e-7])
+    tm = TimeModel(c2=0.04 * (1 + eps), c1=np.full(4, 0.004),
+                   c0=np.full(4, 0.4))
+    prob = AllocationProblem(time_model=tm, T=6.0, total_samples=80,
+                             d_lower=10, d_upper=40)
+    horizon = horizon_cycles * prob.T
+    train, _ = synthetic_mnist(4000, n_test=10, seed=seed)
+    cfg = AsyncConfig(mode="fedasync", alpha=0.6)
+    params = mlp.init(jax.random.key(seed))
+
+    def eager():
+        eng = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
+        return eng.run(train, horizon)
+
+    def jagged():
+        eng = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
+        return eng.run_events(train, horizon)
+
+    eager()                   # compile + warmup
+    jagged()
+    t0 = time.time()
+    h_e = eager()
+    eager_s = time.time() - t0
+    t0 = time.time()
+    h_j = jagged()
+    jagged_s = time.time() - t0
+    assert len(h_e) == len(h_j)
+    n = len(h_e)
+    return {
+        "K": prob.num_learners,
+        "events": n,
+        "grid": "none (near-tie schedule: exact grid exceeds the cap)",
+        "eager_s": round(eager_s, 3),
+        "jagged_s": round(jagged_s, 3),
+        "eager_events_per_s": round(n / eager_s, 1),
+        "jagged_events_per_s": round(n / jagged_s, 1),
+        "speedup_jagged": round(eager_s / jagged_s, 2),
     }
 
 
@@ -102,11 +179,19 @@ def main(quick: bool = False) -> None:
               f"{r['staleness_max']}")
 
     eng = bench_engine(horizon_cycles=4 if quick else 8)
-    print(f"engine eager {eng['eager_events_per_s']} ev/s vs bucketed "
-          f"{eng['bucketed_events_per_s']} ev/s over {eng['events']} events "
-          f"({eng['speedup']}x, H={eng['num_buckets']})")
+    print(f"engine eager {eng['eager_events_per_s']} ev/s vs grid "
+          f"{eng['bucketed_events_per_s']} ev/s vs jagged "
+          f"{eng['jagged_events_per_s']} ev/s over {eng['events']} events "
+          f"(grid {eng['speedup_grid']}x H={eng['num_buckets']}, "
+          f"jagged {eng['speedup_jagged']}x S={eng['num_segments']})")
 
-    _merge_out("async", {"modes": rows, "engine": eng})
+    nt = bench_engine_near_tie(horizon_cycles=3 if quick else 4)
+    print(f"near-tie fleet (no exact grid): eager "
+          f"{nt['eager_events_per_s']} ev/s vs jagged "
+          f"{nt['jagged_events_per_s']} ev/s over {nt['events']} events "
+          f"({nt['speedup_jagged']}x)")
+
+    _merge_out("async", {"modes": rows, "engine": eng, "jagged_only": nt})
 
 
 if __name__ == "__main__":

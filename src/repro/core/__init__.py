@@ -1,5 +1,34 @@
 """Core contribution of the paper: staleness-aware task allocation for
-asynchronous federated mobile-edge learning."""
+asynchronous federated mobile-edge learning.
+
+Public surface (see ``docs/architecture.md`` for the layer map and
+``docs/allocation.md`` for the paper-notation-to-code mapping):
+
+* **Problem & time model** — ``TimeModel`` (Eq. 5 coefficients C2/C1/C0
+  per learner), ``AllocationProblem`` (fleet + budget T + sample total and
+  box bounds), ``ChannelParams``/``LearnerProfile`` and the
+  ``indoor_80211_profile``/``pod_slice_profile`` reference environments,
+  ``ModelCost`` constants (``mnist_dnn_cost`` etc.).
+* **Per-problem solvers** — ``solve_kkt_sai`` (the paper's KKT
+  water-filling + suggest-and-improve), ``solve_relaxed`` /
+  ``suggest_and_improve`` (its stages), ``solve_slsqp`` / ``solve_pgd_jax``
+  (numeric baselines), ``solve_eta`` / ``solve_synchronous`` (baselines).
+* **Batched engine** — ``BatchedProblems`` / ``BatchedAllocation`` (the
+  (B, K) fleet-batch layout), ``solve_kkt_batched`` / ``solve_eta_batched``
+  / ``solve_pgd_batched`` (one XLA program for B fleets),
+  ``batched_policy`` + ``TRACED_POLICIES`` (traced in-scan re-solve hooks),
+  ``batched_max_staleness`` / ``batched_avg_staleness`` /
+  ``batched_summary`` (vectorized metrics).
+* **Staleness** — ``max_staleness`` / ``avg_staleness`` (the paper's
+  update staleness, Eqs. 6/13), ``version_staleness`` /
+  ``staleness_factor`` / ``version_staleness_profile`` + ``STALENESS_FNS``
+  (FedAsync version staleness and its discounts).
+* **Aggregation** — ``aggregate`` (weighted model mean),
+  ``staleness_weights`` / ``fedavg_weights``.
+* **Capacity dynamics** — ``CapacityDrift`` (exogenous per-cycle
+  fading/jitter), ``QueueDrift`` (state-coupled backlog dynamics driven by
+  the dispatched allocations), ``is_state_coupled`` (protocol probe).
+"""
 
 from repro.core.allocation import Allocation, AllocationProblem
 from repro.core.aggregation import aggregate, fedavg_weights, staleness_weights
@@ -31,8 +60,10 @@ from repro.core.time_model import (
     CapacityDrift,
     ChannelParams,
     LearnerProfile,
+    QueueDrift,
     TimeModel,
     indoor_80211_profile,
+    is_state_coupled,
     pod_slice_profile,
 )
 
@@ -52,7 +83,9 @@ __all__ = [
     "ChannelParams",
     "LearnerProfile",
     "ModelCost",
+    "QueueDrift",
     "TimeModel",
+    "is_state_coupled",
     "aggregate",
     "avg_staleness",
     "fedavg_weights",

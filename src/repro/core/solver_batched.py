@@ -602,13 +602,38 @@ def batched_policy(
     interpret: bool = False,
     pgd_steps: int = 600,
 ):
-    """A traced allocation policy: ``fn(c2, c1, c0, T, total_i, d_lo, d_hi,
-    valid) -> (tau, d, feasible)`` over (B, K) batches, safe to call inside
-    ``jit``/``scan`` (it is the orchestrator's per-cycle in-scan
-    reallocation hook). ``name`` is one of ``kkt_sai`` (paper pipeline),
-    ``eta`` (equal-task baseline) or ``pgd`` (relaxed projected-gradient +
-    the same integerize/SAI tail). The returned callable is cached per
-    option set so jit caches keyed on it stay warm."""
+    """A traced allocation policy — the in-scan re-solve hook of the fused
+    orchestrator and the per-(re)dispatch solve of the async engine.
+
+    Parameters
+    ----------
+    name : one of ``TRACED_POLICIES``: ``"kkt_sai"`` (the paper's
+        water-filling + SAI pipeline), ``"eta"`` (equal-task baseline) or
+        ``"pgd"`` (relaxed projected-gradient + the same integerize/SAI
+        tail).
+    tol, max_iter : bisection stop criteria (kkt_sai).
+    max_rounds : SAI repair bound (kkt_sai, pgd).
+    use_pallas, interpret : route bisection residuals through the Pallas
+        TPU kernel (float32 only; ``interpret=True`` emulates on CPU).
+    pgd_steps : inner gradient steps (pgd).
+
+    Returns
+    -------
+    A pure traced callable ``fn(c2, c1, c0, T, total_i, d_lo, d_hi, valid)
+    -> (tau, d, feasible)`` safe to call inside ``jit``/``scan``/``vmap``:
+
+    * inputs — ``c2/c1/c0/d_lo/d_hi``: (B, K) float capacity rows and box
+      bounds; ``T``: (B,) float deadlines; ``total_i``: (B,) int sample
+      budgets; ``valid``: (B, K) bool fleet mask (``BatchedProblems``
+      padding semantics: padded slots carry ``d_lo = d_hi = 0``);
+    * outputs — ``tau, d``: (B, K) int allocations (0 in padded slots);
+      ``feasible``: (B,) bool, False where even tau = 0 cannot absorb the
+      budget (outputs in such rows are neutralized, not meaningful).
+
+    Run under ``enable_x64`` with f64 inputs to reproduce the NumPy
+    solvers decision-for-decision; f32 inputs give the device-resident
+    fast path. The returned callable is cached per option set so jit
+    caches keyed on it stay warm."""
     if name == "kkt_sai":
         return functools.partial(
             _kkt_policy, tol=tol, max_iter=max_iter, max_rounds=max_rounds,

@@ -33,8 +33,10 @@ __all__ = [
     "CapacityDrift",
     "ChannelParams",
     "LearnerProfile",
+    "QueueDrift",
     "TimeModel",
     "indoor_80211_profile",
+    "is_state_coupled",
     "pod_slice_profile",
 ]
 
@@ -217,6 +219,168 @@ class CapacityDrift:
         clock = np.asarray(clock, np.float64)
         rate = np.asarray(rate, np.float64)
         return tm.c2[None] / clock, tm.c1[None] / rate, tm.c0[None] / rate
+
+
+# ---------------------------------------------------------------------------
+# State-coupled capacities (queue-driven drift)
+# ---------------------------------------------------------------------------
+
+def is_state_coupled(drift) -> bool:
+    """True when ``drift`` follows the state-coupled protocol: it carries
+    per-fleet state through the run (``state_init`` / ``state_update``) and
+    its ``factors_at`` takes that state as a third argument. Consumers use
+    this to decide whether the capacity rows can be materialized up front
+    (exogenous drift — ``CapacityDrift.coefficient_path``) or must be
+    rolled out jointly with the allocations (``QueueDrift.rollout`` on the
+    host, the scan carry on the fused path)."""
+    return hasattr(drift, "state_update") and hasattr(drift, "state_init")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueDrift:
+    """State-coupled capacity drift: per-learner congestion queues driven by
+    the work the allocator itself dispatches.
+
+    ``CapacityDrift`` models exogenous rate/clock processes; real edge
+    fleets additionally couple capacity to system state — a learner that
+    keeps receiving more than its fair share of samples builds a transfer
+    backlog that degrades its achievable rate (queueing at the access
+    point, contention on the shared channel). This class closes that loop:
+
+      * **state** — a ``(K,)`` float32 backlog vector ``q``, one queue per
+        learner, starting at ``state_init(k)`` (zeros);
+      * **dynamics** (``state_update``) — after the cycle's allocation
+        ``(tau, d)`` is served, each queue moves by the learner's load
+        relative to its fair share,  ``q' = clip(q + gain * (d_k * K /
+        sum(d) - service), 0, q_max)`` — a learner at fair share
+        (``load = service = 1``) holds its backlog, an over-loaded learner
+        accumulates, an under-loaded one drains;
+      * **capacity coupling** (``factors_at``) — the achievable rate R_k is
+        degraded by the backlog, ``rate_factor = 1 / (1 + congestion *
+        q_k)``, scaling C1_k and C0_k by its inverse (the same lever
+        ``CapacityDrift`` fades); compute (C2_k) is untouched unless a
+        ``base`` exogenous drift is composed on top.
+
+    ``factors_at(cycle, k, state)`` is the state-coupled overload of
+    ``CapacityDrift.factors_at(cycle, k)``: same return convention
+    ((clock, rate) float32 factor pairs), with the extra ``state``
+    argument read from the fused scan's carry. All queue arithmetic is
+    elementwise float32 with no transcendentals, so traced (in-scan) and
+    host (``rollout``) evaluations are **bitwise identical**; composing a
+    ``base`` ``CapacityDrift`` re-introduces that class's documented
+    1-f32-ULP pow caveat.
+
+    Because the capacities of cycle c depend on the allocations of cycles
+    < c, there is no standalone coefficient path: rows and allocations
+    must be produced together, either sequentially on the host
+    (``rollout``, used by the eager orchestrator and the async engine's
+    scheduler) or inside the fused scan (``Orchestrator.run_fused(
+    reallocate=True)``, where ``factors_at`` reads the queue state from
+    the scan carry and no host coefficient path enters the program).
+    """
+
+    congestion: float = 0.3     # rate degradation per unit backlog
+    gain: float = 1.0           # backlog added per unit of excess load
+    service: float = 1.0        # fair-share load served per cycle
+    q_max: float = 8.0          # backlog clip (bounded buffers)
+    base: CapacityDrift | None = None   # exogenous drift composed on top
+
+    def state_init(self, k: int):
+        """Initial (K,) float32 backlog: empty queues."""
+        import jax.numpy as jnp
+
+        return jnp.zeros((k,), jnp.float32)
+
+    def factors_at(self, cycle, k: int, state):
+        """(clock_factor, rate_factor), each (K,) float32, for one cycle
+        given the current backlog ``state``. The state-coupled overload of
+        ``CapacityDrift.factors_at`` — jit-compatible on a traced cycle
+        index AND a traced state (the fused scan's carry)."""
+        import jax.numpy as jnp
+
+        if self.base is not None:
+            clock, rate = self.base.factors_at(cycle, k)
+        else:
+            clock = jnp.ones((k,), jnp.float32)
+            rate = jnp.ones((k,), jnp.float32)
+        q = jnp.asarray(state, jnp.float32)
+        rate = rate / (1.0 + jnp.float32(self.congestion) * q)
+        return clock, rate
+
+    def state_update(self, cycle, state, tau, d):
+        """Next (K,) float32 backlog after serving allocation ``(tau, d)``.
+
+        ``load_k = d_k * K / sum(d)`` is the learner's share of the cycle's
+        transfer volume relative to fair share (the sum is exact integer
+        arithmetic; everything after is elementwise f32, bit-stable across
+        jit/eager contexts). ``tau`` is accepted for protocol generality
+        (compute-queue models would read it) but unused here; ``cycle``
+        likewise (time-varying service rates would read it)."""
+        import jax.numpy as jnp
+
+        del cycle, tau
+        k = d.shape[-1]
+        tot = jnp.maximum(jnp.sum(d), 1).astype(jnp.float32)
+        load = d.astype(jnp.float32) * jnp.float32(k) / tot
+        q = jnp.asarray(state, jnp.float32)
+        q = q + jnp.float32(self.gain) * (load - jnp.float32(self.service))
+        return jnp.clip(q, 0.0, jnp.float32(self.q_max))
+
+    def rollout_iter(self, tm: "TimeModel", cycles: int, solve):
+        """Lazy host-side rollout of the coupled system: per cycle,
+        evaluate the drifted (c2, c1, c0) row from the current queue
+        state, call ``solve(cycle, c2_row, c1_row, c0_row) -> (tau, d)``
+        (integer (K,) arrays), advance the state with that allocation, and
+        yield ``(c2_row, c1_row, c0_row, tau, d)``. Laziness lets a
+        consumer interleave its own per-cycle work (the eager
+        orchestrator trains between solves, so an infeasible cycle raises
+        only AFTER the feasible prefix ran — the same contract as the
+        fused scan's in-scan guard).
+
+        The factor math runs under ``enable_x64`` (entered per cycle so
+        the flag never leaks into consumer code between yields) with
+        f32-pinned draws, exactly like ``CapacityDrift.coefficient_path``,
+        so the rows match the fused scan's in-scan ``factors_at``
+        consumers (bitwise for the queue coupling; 1 f32 ULP when a
+        ``base`` drift composes its pow). Raises whatever ``solve``
+        raises (e.g. infeasibility) at the first offending cycle."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        k = tm.num_learners
+        state = None
+        for c in range(cycles):
+            with enable_x64():
+                if state is None:
+                    state = self.state_init(k)
+                clock, rate = self.factors_at(c, k, state)
+                clock = np.asarray(clock, np.float64)
+                rate = np.asarray(rate, np.float64)
+                c2r = tm.c2 / clock
+                c1r = tm.c1 / rate
+                c0r = tm.c0 / rate
+                tau, d = solve(c, c2r, c1r, c0r)
+                state = self.state_update(
+                    c, state, jnp.asarray(tau), jnp.asarray(d)
+                )
+            yield c2r, c1r, c0r, tau, d
+
+    def rollout(self, tm: "TimeModel", cycles: int, solve):
+        """Eager collection of ``rollout_iter``: returns
+        ``((c2s, c1s, c0s), (taus, ds))`` — (C, K) float64 rows and (C, K)
+        int64 allocations (see ``rollout_iter`` for semantics)."""
+        k = tm.num_learners
+        c2s = np.empty((cycles, k))
+        c1s = np.empty((cycles, k))
+        c0s = np.empty((cycles, k))
+        taus = np.zeros((cycles, k), np.int64)
+        ds = np.zeros((cycles, k), np.int64)
+        for c, (c2r, c1r, c0r, tau, d) in enumerate(
+            self.rollout_iter(tm, cycles, solve)
+        ):
+            c2s[c], c1s[c], c0s[c] = c2r, c1r, c0r
+            taus[c], ds[c] = tau, d
+        return (c2s, c1s, c0s), (taus, ds)
 
 
 # ---------------------------------------------------------------------------

@@ -39,20 +39,38 @@ device work is pure tensor compute:
   * ``run`` — eager: walk the schedule, train each arrival's dispatched
     model (one ``local_train`` call per event), mix/flush per event. One
     host round-trip per event.
-  * ``run_bucketed`` — device-resident fast path: completion times are
-    quantized onto a ``num_buckets`` time grid and ALL arrivals run as one
-    jitted ``lax.scan`` over buckets. Each bucket trains the full fleet's
-    carried dispatch models (masked, to the schedule-wide max tau), folds
-    arrivals into a weighted accumulator and applies flushes as masked
-    ``kernels.ops.fed_agg`` contractions, with the (server, dispatched,
-    accumulator) params carry donated — large fleets stay ONE XLA program,
-    like ``Orchestrator.run_fused``. The path is exact (same aggregation
-    sequence to float tolerance) whenever the grid resolves individual
-    arrivals; with ``strict=False``, buckets holding several fedasync
-    arrivals are composed into sequentially-equivalent weights (the
-    aggregation stays exact; only the mid-bucket redispatch model is
-    approximated by the bucket-end server). Memory cost: the pre-staged
-    shard tensor is (H, K, d_cap, F) — the same trade ``run_fused`` makes.
+  * ``run_events`` — device-resident fast path (**event-indexed / jagged
+    bucketing**): the scheduler already fixes the full event timeline, so
+    arrivals are grouped by their *flush structure* — one ``lax.scan``
+    step per flush group (a fedasync arrival, or a buffered group split
+    wherever a learner repeats) — instead of per time bucket. Each step
+    trains the fleet's carried dispatch models (masked, to the
+    schedule-wide max tau), folds the step's arrivals into a weighted
+    accumulator and applies the flush as masked ``kernels.ops.fed_agg``
+    contractions, with the (server, dispatched, accumulator) params carry
+    donated — the whole campaign is ONE XLA program, like
+    ``Orchestrator.run_fused``. Because grouping is by event index, not
+    arrival time, the replay is **exact for every schedule** — including
+    the near-tie and exactly-tying completion times a KKT allocator
+    produces by design, which no fixed time grid can resolve. Memory cost:
+    the pre-staged shard tensor is (S, K, d_cap, F) with S = number of
+    scan steps (≈ number of aggregated arrivals), independent of how
+    close the arrival times are.
+  * ``run_bucketed`` — the legacy fixed-grid fast path: completion times
+    quantized onto a ``num_buckets`` uniform grid, same scan body. Exact
+    only when the grid resolves individual arrivals
+    (``suggest_num_buckets``, whose bucket count blows up as 1/min-gap on
+    near-tie schedules); ``strict=False`` merges colliding fedasync
+    arrivals via sequentially-composed weights (aggregation exact,
+    mid-bucket redispatch approximated), and buffered flushes that
+    straddle a bucket boundary raise. Kept for grid-vs-jagged
+    benchmarking; new callers should use ``run_events``.
+
+Capacity drift composes with both paths through the schedule: exogenous
+``CapacityDrift`` rows are materialized per block, and a state-coupled
+``QueueDrift`` (capacities degraded by the backlog the dispatched
+allocations themselves build up) is rolled out block-by-block jointly
+with the per-block re-solves (``reallocate=True`` required).
 """
 
 from __future__ import annotations
@@ -71,6 +89,7 @@ from repro.core import (
     CapacityDrift,
     aggregate,
     fedavg_weights,
+    is_state_coupled,
     staleness_weights,
 )
 from repro.core.staleness import (
@@ -88,6 +107,7 @@ from repro.fed.orchestrator import (
     local_train,
     local_train_stacked,
     solve_policy_row,
+    solve_rows_state_coupled,
 )
 
 __all__ = ["AsyncConfig", "AsyncFedEngine", "summarize_async_history"]
@@ -168,6 +188,50 @@ class _Schedule:
     max_tau: int             # max tau over arrivals (>= 1)
 
 
+def _event_segments(arrivals: "list[_Arrival]") -> "list[list[_Arrival]]":
+    """Partition the flush-ordered arrival sequence into **event-indexed
+    (jagged) segments** — the scan steps of ``run_events``.
+
+    Invariants (what makes one segment representable as one step of the
+    bucketed scan body, and the whole partition an *exact* replay):
+
+      * at most one arrival per learner per segment (the scan holds one
+        carried dispatch model per learner slot);
+      * at most one flush per segment, always the segment's LAST arrival
+        (so the post-step server is the post-flush server and every
+        mid-segment redispatch sees an unchanged server — which is exactly
+        what the eager loop dispatches, since buffered arrivals before a
+        flush redispatch with the untouched server);
+      * fedasync arrivals each close their own flush, so their segments
+        have exactly one arrival — no weight composition, no mid-step
+        redispatch approximation, regardless of how closely (or exactly)
+        the arrival times tie;
+      * never-flushed trailing arrivals (``flush_id < 0``) are dropped —
+        their local models are unobservable (same rule as the grid path).
+
+    Buffered flush groups are split greedily at learner repeats; the split
+    prefixes become accumulate-only segments (no flush, server untouched).
+    """
+    segments: list[list[_Arrival]] = []
+    cur: list[_Arrival] = []
+    seen: set[int] = set()
+    for a in arrivals:
+        if a.flush_id < 0:
+            continue
+        if a.learner in seen:
+            segments.append(cur)
+            cur, seen = [], set()
+        cur.append(a)
+        seen.add(a.learner)
+        if a.flush:
+            segments.append(cur)
+            cur, seen = [], set()
+    # every kept arrival belongs to a flush group that closes within the
+    # horizon, so the walk always ends on a flush boundary
+    assert not cur
+    return segments
+
+
 class AsyncFedEngine:
     """Virtual-clock asynchronous federation over one fleet.
 
@@ -204,6 +268,12 @@ class AsyncFedEngine:
                 f"buffer_size == K (= {k}); M < K is the event-driven "
                 "buffered regime"
             )
+        if is_state_coupled(drift) and not cfg.reallocate:
+            raise ValueError(
+                "state-coupled drift ties capacities to the dispatched "
+                "allocations; the async engine supports it only with "
+                "reallocate=True (per-block re-solves drive the state)"
+            )
         # the paper-scheme allocation on the base capacities (used by the
         # barrier path so it matches Orchestrator.run bitwise); event-mode
         # dispatches go through the traced batched_policy instead.
@@ -215,7 +285,18 @@ class AsyncFedEngine:
     def _block_rows(self, nblocks: int):
         """(C, K) f64 capacity rows per drift block — the SAME row source
         as ``Orchestrator._coefficient_path`` so barrier runs replay the
-        orchestrator's exact re-solves."""
+        orchestrator's exact re-solves. A state-coupled drift has no
+        standalone row path (its rows depend on the allocations), so rows
+        and per-block solves are rolled out jointly and the allocation
+        cache prefilled."""
+        if is_state_coupled(self.drift):
+            rows, (taus, ds) = solve_rows_state_coupled(
+                self.cfg.scheme, self.drift, self.problem, nblocks,
+                label="capacities at drift block {}",
+            )
+            for b in range(nblocks):
+                self._alloc_cache[b] = (taus[b], ds[b])
+            return rows
         return coefficient_rows(self.problem, self.drift, nblocks)
 
     def _solve_row(self, c2r, c1r, c0r, *, label) -> tuple[np.ndarray, np.ndarray]:
@@ -347,14 +428,30 @@ class AsyncFedEngine:
         max_events: int = 100_000, cap: int = 4096,
     ) -> int:
         """Smallest grid that resolves every arrival into its own bucket
-        (the exact-replay regime of ``run_bucketed``), found by replaying
-        the schedule on a CLONED rng so the engine's own stream is
-        untouched. Raises when the schedule's closest arrival pair needs
-        more than ``cap`` buckets — the paper's KKT allocator equalizes
-        finish times, so near-ties are normal there; fall back to
-        ``strict=False`` merging in that regime."""
-        import copy
+        (the exact-replay regime of the legacy fixed-grid
+        ``run_bucketed``), found by replaying the schedule on a CLONED rng
+        so the engine's own stream is untouched.
 
+        .. deprecated:: use ``run_events`` instead — the event-indexed
+           (jagged) path needs no grid and replays EVERY schedule exactly,
+           including the near-tie and exactly-tying completion times this
+           helper must reject (its bucket count scales with 1/min-gap,
+           and a KKT allocator equalizes finish times by design). This
+           helper remains for grid-vs-jagged benchmarking only and emits
+           a ``DeprecationWarning``.
+
+        Raises when the schedule ties exactly (no grid separates the
+        arrivals) or when resolving it needs more than ``cap`` buckets —
+        in both regimes ``run_events`` is the exact path."""
+        import copy
+        import warnings
+
+        warnings.warn(
+            "suggest_num_buckets serves the legacy fixed-grid run_bucketed;"
+            " run_events needs no grid and is exact on every schedule "
+            "(including tied/near-tie arrivals)",
+            DeprecationWarning, stacklevel=2,
+        )
         rng = copy.deepcopy(self.rng)
         part = FederatedPartitioner(train, seed=int(rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
@@ -364,10 +461,8 @@ class AsyncFedEngine:
         if any(b == a for a, b in zip(ts, ts[1:])):
             raise ValueError(
                 "arrival times tie EXACTLY (homogeneous capacities): no "
-                "grid resolves them into distinct buckets; use "
-                "strict=False (fedasync merges ties via composed weights) "
-                "— buffered schedules whose flushes coincide are "
-                "unrepresentable on a time grid"
+                "grid resolves them into distinct buckets; use run_events "
+                "— event-indexed segments replay tied schedules exactly"
             )
         gaps = [b - a for a, b in zip(ts, ts[1:])]
         if not gaps:
@@ -376,8 +471,8 @@ class AsyncFedEngine:
         if need > cap:
             raise ValueError(
                 f"resolving all arrivals needs {need} buckets (> cap={cap}): "
-                "completion times nearly tie; use strict=False or a wider "
-                "grid consciously"
+                "completion times nearly tie; use run_events (exact, "
+                "grid-free) instead of widening the grid"
             )
         return need
 
@@ -547,7 +642,160 @@ class AsyncFedEngine:
             history.append(rec)
         return history
 
-    # -- bucketed device-resident fast path ----------------------------------
+    # -- shared one-XLA-program execution over event groups -------------------
+    def _run_groups(self, groups, sched: _Schedule, train: Dataset, *,
+                    eval_fn, eval_batch, use_pallas: bool,
+                    interpret: bool) -> list[dict]:
+        """Stage one scan step per event group, run the whole campaign as
+        ONE jitted program (``_bucketed_events``), and replay the history
+        rows — THE shared back half of ``run_events`` (jagged segments)
+        and ``run_bucketed`` (grid buckets), so the two scan paths cannot
+        diverge in staging semantics.
+
+        Empty groups are allowed (empty grid buckets; runtime-skipped scan
+        steps). fedasync groups may hold several arrivals (grid
+        ``strict=False`` merging): their sequential mixes are composed
+        into one contraction — for single-arrival groups (always, on the
+        jagged path) the composition degenerates to the schedule's own
+        per-arrival coefficients bitwise. The post-step accuracy is
+        attributed to the group's LAST flush row (earlier merged flushes
+        have no mid-step eval point)."""
+        if eval_fn is not None and eval_batch is None:
+            raise ValueError("eval_fn needs eval_batch=(x, y)")
+        n = len(groups)
+        k_fleet = self.problem.num_learners
+        feat = train.x.shape[1]
+        d_cap, max_tau = sched.d_cap, sched.max_tau
+        xs = np.zeros((n, k_fleet, d_cap, feat), np.float32)
+        ys = np.zeros((n, k_fleet, d_cap), np.int32)
+        ms = np.zeros((n, k_fleet, d_cap), np.float32)
+        tau_g = np.zeros((n, k_fleet), np.int32)
+        wc = np.zeros((n, k_fleet), np.float32)
+        keepv = np.ones(n, np.float32)
+        fflag = np.zeros(n, np.float32)
+        rmask = np.zeros((n, k_fleet), bool)
+        pmask = np.zeros((n, k_fleet), bool)
+        for i, evs in enumerate(groups):
+            if not evs:
+                continue
+            if self.cfg.mode == "fedasync":
+                # sequential mixes composed into one contraction:
+                # server' = prod(1-b_i) * server + sum_i b_i prod_{j>i}(1-b_j) w_i
+                betas = np.array([a.weight for a in evs])
+                suffix = np.cumprod((1.0 - betas)[::-1])[::-1]
+                keepv[i] = float(suffix[0])
+                comp = betas * np.concatenate([suffix[1:], [1.0]])
+                for a, w_i in zip(evs, comp):
+                    wc[i, a.learner] = w_i
+                fflag[i] = 1.0
+            else:
+                for a in evs:
+                    wc[i, a.learner] = a.weight
+                if evs[-1].flush:
+                    fflag[i] = 1.0
+                    keepv[i] = evs[-1].keep
+            for a in evs:
+                k = a.learner
+                rmask[i, k] = True
+                pmask[i, k] = a.flush
+                tau_g[i, k] = a.tau
+                xs[i, k, : a.d] = train.x[a.idx]
+                ys[i, k, : a.d] = train.y[a.idx]
+                ms[i, k, : a.d] = 1.0
+
+        ex = jnp.asarray(eval_batch[0]) if eval_fn is not None else None
+        ey = jnp.asarray(eval_batch[1]) if eval_fn is not None else None
+        disp0 = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p, (k_fleet,) + p.shape),
+            self.params,
+        )
+        accum0 = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        self.params, accs = _bucketed_events(
+            self.params, disp0, accum0, jnp.asarray(xs), jnp.asarray(ys),
+            jnp.asarray(ms), jnp.asarray(tau_g), jnp.asarray(wc),
+            jnp.asarray(keepv), jnp.asarray(fflag),
+            jnp.asarray(rmask), jnp.asarray(pmask),
+            jnp.asarray(self.cfg.lr, jnp.float32), ex, ey,
+            max_tau=max_tau, loss_fn=self.loss_fn, eval_fn=eval_fn,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        accs = np.asarray(accs)
+
+        history: list[dict] = []
+        group: list[_Arrival] = []
+        for i, evs in enumerate(groups):
+            flushes = [a for a in evs if a.flush]
+            for a in evs:
+                group.append(a)
+                if a.flush:
+                    rec = self._flush_row(a, group)
+                    if eval_fn is not None and a is flushes[-1]:
+                        rec["accuracy"] = float(accs[i])
+                    history.append(rec)
+                    group = []
+        return history
+
+    # -- event-indexed (jagged) device-resident fast path ---------------------
+    def run_events(
+        self,
+        train: Dataset,
+        horizon: float,
+        *,
+        eval_fn=None,
+        eval_batch=None,
+        use_pallas: bool = False,
+        interpret: bool = False,
+        max_events: int = 100_000,
+    ) -> list[dict]:
+        """The eager event loop as ONE jitted ``lax.scan`` over
+        **event-indexed (jagged) segments** — the exact device-resident
+        fast path.
+
+        Arrivals are grouped by flush structure (``_event_segments``), not
+        onto a time grid: one scan step per fedasync arrival / buffered
+        flush group (split at learner repeats). Exactness needs no grid
+        resolution, so near-tie and exactly-tying completion times — the
+        norm under the paper's KKT allocator, which equalizes finish times
+        — replay exactly, where ``run_bucketed`` needed an exploding
+        ``num_buckets`` or lossy ``strict=False`` merging.
+
+        Parameters
+        ----------
+        train : Dataset the shard draws index into (same rng discipline as
+            ``run`` — the two paths share one host schedule).
+        horizon : float — virtual-time horizon in seconds.
+        eval_fn : optional jit-traceable ``(params, x, y) -> scalar``,
+            evaluated inside the scan after every flush on ``eval_batch``.
+        eval_batch : ``(x, y)`` arrays; required with ``eval_fn``.
+        use_pallas, interpret : route the ``ops.fed_agg`` contractions
+            through the Pallas TPU kernel (``interpret=True`` on CPU).
+        max_events : schedule-length safety cap.
+
+        Returns
+        -------
+        One history row per server aggregation, identical to ``run``'s for
+        the same seed: versions, staleness lists and weights bitwise (they
+        come from the shared schedule); aggregated params match to float
+        tolerance (the scan composes the same contractions in a different
+        reduction order).
+        """
+        if self.cfg.barrier:
+            raise ValueError(
+                "the barrier (cycle-gated) regime is already one XLA "
+                "program via Orchestrator.run_fused; run_events is the "
+                "event-driven fast path"
+            )
+        part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
+        sched = self._build_schedule(part, horizon, max_events)
+        segments = _event_segments(sched.arrivals)
+        if not segments:
+            return []
+        return self._run_groups(
+            segments, sched, train, eval_fn=eval_fn, eval_batch=eval_batch,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+
+    # -- bucketed device-resident fast path (legacy fixed grid) ---------------
     def run_bucketed(
         self,
         train: Dataset,
@@ -561,12 +809,24 @@ class AsyncFedEngine:
         interpret: bool = False,
         max_events: int = 100_000,
     ) -> list[dict]:
-        """The eager event loop as ONE jitted ``lax.scan`` over a
-        ``num_buckets`` time grid (see module docstring). History rows are
-        identical to ``run``'s for the same seed (same host schedule); the
-        aggregation sequence matches to float tolerance whenever each
-        bucket holds at most one arrival — the guards below raise (with a
-        remedy) for grids too coarse to be faithful at all."""
+        """LEGACY fixed-grid twin of ``run_events``: the eager event loop
+        as ONE jitted ``lax.scan`` over a ``num_buckets`` uniform time
+        grid (see module docstring). History rows are identical to
+        ``run``'s for the same seed (same host schedule); the aggregation
+        sequence matches to float tolerance whenever each bucket holds at
+        most one arrival — the guards below raise (with a remedy) for
+        grids too coarse to be faithful at all.
+
+        Prefer ``run_events``: it groups by event index instead of time,
+        so it is exact on the near-tie/tied schedules this grid cannot
+        represent, needs no ``num_buckets``/``strict`` tuning, and stages
+        a smaller tensor (S segments vs H >= S buckets). This path is
+        kept for grid-vs-jagged benchmarking (``benchmarks/async_bench``).
+
+        Parameters mirror ``run_events`` plus ``num_buckets`` (grid size)
+        and ``strict`` (raise on multi-arrival buckets vs merge fedasync
+        collisions into composed weights — exact aggregation, approximated
+        mid-bucket redispatch)."""
         if self.cfg.barrier:
             raise ValueError(
                 "the barrier (cycle-gated) regime is already one XLA "
@@ -577,13 +837,8 @@ class AsyncFedEngine:
             raise ValueError("num_buckets must be >= 1")
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
-        evalj = eval_fn  # traced inside the scan; no separate jit wrapper
-        if eval_fn is not None and eval_batch is None:
-            raise ValueError("eval_fn needs eval_batch=(x, y)")
 
         h = num_buckets
-        k_fleet = self.problem.num_learners
-        feat = train.x.shape[1]
         width = horizon / h
         buckets: list[list[_Arrival]] = [[] for _ in range(h)]
         for a in sched.arrivals:
@@ -603,9 +858,10 @@ class AsyncFedEngine:
             if strict and len(evs) > 1:
                 raise ValueError(
                     f"bucket {b} holds {len(evs)} arrivals; increase "
-                    "num_buckets for an exact replay, or pass strict=False "
+                    "num_buckets for an exact replay, pass strict=False "
                     "to merge them (exact aggregation via composed weights; "
-                    "mid-bucket redispatches then see the bucket-end server)"
+                    "mid-bucket redispatches then see the bucket-end "
+                    "server), or use run_events (exact without a grid)"
                 )
             if self.cfg.mode == "buffered":
                 # fedasync flushes per arrival and merges exactly via the
@@ -614,9 +870,9 @@ class AsyncFedEngine:
                 tie = len({a.t for a in evs}) < len(evs)
                 remedy = (
                     "arrival times tie exactly, so NO grid separates them "
-                    "— this buffered schedule is unrepresentable on a "
-                    "time-bucket grid (use the eager run)"
-                    if tie else "increase num_buckets"
+                    "— use run_events (event-indexed segments replay tied "
+                    "buffered schedules exactly)"
+                    if tie else "increase num_buckets (or use run_events)"
                 )
                 nflush = sum(a.flush for a in evs)
                 if nflush > 1:
@@ -629,77 +885,10 @@ class AsyncFedEngine:
                         f"the next group share it); {remedy}"
                     )
 
-        # host-composed per-bucket tensors
-        d_cap, max_tau = sched.d_cap, sched.max_tau
-        xs = np.zeros((h, k_fleet, d_cap, feat), np.float32)
-        ys = np.zeros((h, k_fleet, d_cap), np.int32)
-        ms = np.zeros((h, k_fleet, d_cap), np.float32)
-        tau_g = np.zeros((h, k_fleet), np.int32)
-        wc = np.zeros((h, k_fleet), np.float32)
-        keepv = np.ones(h, np.float32)
-        fflag = np.zeros(h, np.float32)
-        rmask = np.zeros((h, k_fleet), bool)
-        for b, evs in enumerate(buckets):
-            if not evs:
-                continue
-            if self.cfg.mode == "fedasync":
-                # sequential mixes composed into one contraction:
-                # server' = prod(1-b_i) * server + sum_i b_i prod_{j>i}(1-b_j) w_i
-                betas = np.array([a.weight for a in evs])
-                suffix = np.cumprod((1.0 - betas)[::-1])[::-1]
-                keepv[b] = float(suffix[0])
-                comp = betas * np.concatenate([suffix[1:], [1.0]])
-                for a, w_i in zip(evs, comp):
-                    wc[b, a.learner] = w_i
-                fflag[b] = 1.0
-            else:
-                for a in evs:
-                    wc[b, a.learner] = a.weight
-                if evs[-1].flush:
-                    fflag[b] = 1.0
-                    keepv[b] = evs[-1].keep
-            for a in evs:
-                k = a.learner
-                rmask[b, k] = True
-                tau_g[b, k] = a.tau
-                xs[b, k, : a.d] = train.x[a.idx]
-                ys[b, k, : a.d] = train.y[a.idx]
-                ms[b, k, : a.d] = 1.0
-
-        ex = jnp.asarray(eval_batch[0]) if eval_fn is not None else None
-        ey = jnp.asarray(eval_batch[1]) if eval_fn is not None else None
-        disp0 = jax.tree_util.tree_map(
-            lambda p: jnp.broadcast_to(p, (k_fleet,) + p.shape),
-            self.params,
-        )
-        accum0 = jax.tree_util.tree_map(jnp.zeros_like, self.params)
-        self.params, accs = _bucketed_events(
-            self.params, disp0, accum0, jnp.asarray(xs), jnp.asarray(ys),
-            jnp.asarray(ms), jnp.asarray(tau_g), jnp.asarray(wc),
-            jnp.asarray(keepv), jnp.asarray(fflag),
-            jnp.asarray(rmask), jnp.asarray(self.cfg.lr, jnp.float32), ex, ey,
-            max_tau=max_tau, loss_fn=self.loss_fn, eval_fn=evalj,
+        return self._run_groups(
+            buckets, sched, train, eval_fn=eval_fn, eval_batch=eval_batch,
             use_pallas=use_pallas, interpret=interpret,
         )
-        accs = np.asarray(accs)
-
-        history: list[dict] = []
-        group: list[_Arrival] = []
-        for b, evs in enumerate(buckets):
-            flushes = [a for a in evs if a.flush]
-            for a in evs:
-                group.append(a)
-                if a.flush:
-                    rec = self._flush_row(a, group)
-                    # accs[b] is the post-BUCKET accuracy: when strict=False
-                    # merges several flushes into one bucket, attribute it
-                    # only to the last one (earlier rows have no mid-bucket
-                    # eval point)
-                    if eval_fn is not None and a is flushes[-1]:
-                        rec["accuracy"] = float(accs[b])
-                    history.append(rec)
-                    group = []
-        return history
 
 
 @functools.partial(
@@ -707,9 +896,10 @@ class AsyncFedEngine:
     static_argnames=("max_tau", "loss_fn", "eval_fn", "use_pallas", "interpret"),
 )
 def _bucketed_events(server, disp, accum, xs, ys, ms, taus, wcs, keeps, fs,
-                     rmask, lr, eval_x, eval_y, *, max_tau: int, loss_fn,
-                     eval_fn, use_pallas: bool, interpret: bool):
-    """One XLA program for H time buckets of the async event system:
+                     rmask, pmask, lr, eval_x, eval_y, *, max_tau: int,
+                     loss_fn, eval_fn, use_pallas: bool, interpret: bool):
+    """One XLA program for H scan steps (time buckets of ``run_bucketed``
+    or jagged event segments of ``run_events``) of the async event system:
     scan(train carried dispatch models -> fold arrivals into the weighted
     accumulator -> masked flush into the server -> masked redispatch). The
     initial server buffer is NOT donated on purpose: engines may share the
@@ -717,15 +907,22 @@ def _bucketed_events(server, disp, accum, xs, ys, ms, taus, wcs, keeps, fs,
     either way).
 
     xs: (H, K, d_cap, F); ys/ms: (H, K, d_cap); taus/wcs: (H, K);
-    keeps/fs: (H,); rmask: (H, K) bool. Per bucket the server update is the
-    ``ops.fed_agg`` contraction  server' = fed_agg([server, A'], [keep, f])
-    with A' = fed_agg([A, locals], [1, w_c]) — f = 0 buckets leave the
-    server untouched, f = 1 buckets apply a flush whose coefficients the
-    host composed to be exactly the eager loop's sequential mixes."""
+    keeps/fs: (H,); rmask/pmask: (H, K) bool. Per step the server update is
+    the ``ops.fed_agg`` contraction server' = fed_agg([server, A'],
+    [keep, f]) with A' = fed_agg([A, locals], [1, w_c]) — f = 0 steps leave
+    the server untouched, f = 1 steps apply a flush whose coefficients the
+    host composed to be exactly the eager loop's sequential mixes.
+
+    Redispatch is mask-split to mirror the eager loop's timing exactly:
+    arrivals in ``pmask`` (flush arrivals — all of fedasync, the buffer
+    closer in buffered mode) redispatch with the POST-flush server; the
+    remaining ``rmask`` arrivals (buffered accumulate uploads, which the
+    eager loop redispatches before any flush touches the server)
+    redispatch with the step's incoming PRE-flush server."""
     from repro.kernels import ops
 
     def one_bucket(carry, inp):
-        x, y, m, tau, w, keep, f, rm = inp
+        x, y, m, tau, w, keep, f, rm, pm = inp
 
         def process(op):
             server, dp, acc = op
@@ -750,11 +947,17 @@ def _bucketed_events(server, disp, accum, xs, ys, ms, taus, wcs, keeps, fs,
                 server, acc1,
             )
             acc2 = jax.tree_util.tree_map(lambda a: (1.0 - f) * a, acc1)
+            pre = rm & jnp.logical_not(pm)
             dp1 = jax.tree_util.tree_map(
-                lambda old, new: jnp.where(
-                    rm.reshape((-1,) + (1,) * (new.ndim)), new[None], old
+                lambda old, new_post, new_pre: jnp.where(
+                    pm.reshape((-1,) + (1,) * new_post.ndim),
+                    new_post[None],
+                    jnp.where(
+                        pre.reshape((-1,) + (1,) * new_pre.ndim),
+                        new_pre[None], old,
+                    ),
                 ),
-                dp, server1,
+                dp, server1, server,
             )
             # only flush buckets' accuracies are ever read back (buffered
             # accumulation buckets would be dead eval compute)
@@ -779,7 +982,7 @@ def _bucketed_events(server, disp, accum, xs, ys, ms, taus, wcs, keeps, fs,
 
     (server, disp, accum), accs = jax.lax.scan(
         one_bucket, (server, disp, accum), (xs, ys, ms, taus, wcs, keeps, fs,
-                                            rmask)
+                                            rmask, pmask)
     )
     return server, accs
 

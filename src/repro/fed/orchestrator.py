@@ -75,6 +75,7 @@ from repro.core import (
     staleness_weights,
 )
 from repro.core.staleness import avg_staleness, max_staleness
+from repro.core.time_model import is_state_coupled
 from repro.data.pipeline import Dataset, FederatedPartitioner
 
 __all__ = ["MELConfig", "Orchestrator", "local_train", "local_train_stacked"]
@@ -242,8 +243,18 @@ def coefficient_rows(prob: AllocationProblem, drift: CapacityDrift | None,
     """(C, K) f64 capacity rows per global cycle / drift block — drifted
     when a CapacityDrift is attached, else the base coefficients tiled.
     THE shared row source for the orchestrator's eager re-solves and the
-    async engine's schedule (their bitwise equivalence depends on it)."""
+    async engine's schedule (their bitwise equivalence depends on it).
+    State-coupled drifts (``QueueDrift``) have no standalone row path —
+    their rows depend on the allocations — so they are rejected here;
+    callers roll rows and allocations out together via
+    ``solve_rows_state_coupled`` / the fused scan instead."""
     tm = prob.time_model
+    if is_state_coupled(drift):
+        raise TypeError(
+            "state-coupled drift has no standalone coefficient path (its "
+            "rows depend on the allocations); use drift.rollout(...) or "
+            "solve_rows_state_coupled(...)"
+        )
     if drift is None:
         tile = lambda a: np.broadcast_to(
             a, (cycles, tm.num_learners)
@@ -277,6 +288,34 @@ def solve_policy_row(scheme: str, c2r, c1r, c0r, prob: AllocationProblem,
     return tau.astype(np.int64), d.astype(np.int64)
 
 
+def solve_rows_state_coupled(scheme: str, drift, prob: AllocationProblem,
+                             cycles: int, *, label: str, lazy: bool = False):
+    """Joint host rollout of capacity rows AND allocations for a
+    state-coupled drift (``QueueDrift``): cycle by cycle, the drifted row
+    is produced from the current drift state, solved through the SAME
+    jitted traced policy as every other re-solve path
+    (``solve_policy_row``), and the state advanced with the solved
+    allocation. Shared by the orchestrator's eager reallocation path and
+    the async engine's scheduler so both replay the fused scan's coupled
+    trajectory. ``label`` is a format string receiving the cycle index for
+    infeasibility errors.
+
+    Returns ``((c2s, c1s, c0s), (taus, ds))``, or with ``lazy=True`` the
+    underlying per-cycle iterator (``QueueDrift.rollout_iter``) so the
+    caller can interleave work between solves — the eager orchestrator
+    uses this to train the feasible prefix before an infeasible cycle
+    raises, mirroring the fused scan's in-scan guard."""
+
+    def _solve(c, c2r, c1r, c0r):
+        return solve_policy_row(
+            scheme, c2r, c1r, c0r, prob, label=label.format(c)
+        )
+
+    if lazy:
+        return drift.rollout_iter(prob.time_model, cycles, _solve)
+    return drift.rollout(prob.time_model, cycles, _solve)
+
+
 def _weights_traced(tau, d, *, aggregation: str, gamma):
     """Traced twin of staleness_weights / fedavg_weights (f64 in, f32 out
     matches the eager numpy arithmetic followed by aggregate's cast)."""
@@ -295,35 +334,59 @@ def _weights_traced(tau, d, *, aggregation: str, gamma):
                      "aggregation", "drift", "use_pallas", "interpret"),
     donate_argnums=(0,),
 )
-def _fused_realloc_cycles(params, xs, ys, c2b, c1b, c0b, T1, total1, lo1, hi1,
-                          valid1, gamma, lr, eval_x, eval_y, *,
+def _fused_realloc_cycles(params, state0, xs, ys, c2b, c1b, c0b, T1, total1,
+                          lo1, hi1, valid1, gamma, lr, eval_x, eval_y, *,
                           d_cap: int, loss_fn, eval_fn, policy,
-                          aggregation: str, drift: CapacityDrift | None,
-                          use_pallas: bool, interpret: bool):
+                          aggregation: str, drift, use_pallas: bool,
+                          interpret: bool):
     """One XLA program for C global cycles WITH per-cycle reallocation:
-    scan(drift capacities at the traced cycle index -> policy-solve ->
-    shard split by traced d -> dynamic local_train -> fed_agg).
-    xs: (C, total, F) flat per-cycle sample tensors; c2b/c1b/c0b: (1, K)
-    f64 BASE capacity rows — the per-cycle drifted rows are generated
-    INSIDE the scan by ``drift.factors_at`` on the traced cycle index (no
-    host-precomputed coefficient path enters the program), which is what
-    lets a future state-dependent drift read the scan carry; ``drift=None``
-    runs the static-capacity rows as-is. T1/total1: (1,); lo1/hi1/valid1:
-    (1, K). Must run under ``enable_x64`` so the allocation math stays f64
-    while training stays f32 (drift draws are f32-pinned either way, so the
-    traced rows track ``CapacityDrift.coefficient_path`` to 1 f32 ULP and
-    yield the same integer allocations)."""
+    scan(drift capacities at the traced cycle index/state -> policy-solve
+    -> in-scan feasibility guard -> shard split by traced d -> dynamic
+    local_train -> fed_agg).
+
+    Arguments
+    ---------
+    params : model pytree (the scan carry; this buffer is donated)
+    state0 : (K,) f32 drift state for a state-coupled ``drift``
+        (``QueueDrift.state_init``), else a (0,) placeholder
+    xs, ys : (C, total, F) / (C, total) flat per-cycle sample tensors
+    c2b, c1b, c0b : (1, K) f64 BASE capacity rows — per-cycle drifted rows
+        are generated INSIDE the scan by ``drift.factors_at`` on the
+        traced cycle index (and, for a state-coupled drift, the carried
+        state), so no host-precomputed coefficient path enters the
+        program; ``drift=None`` runs the static rows as-is
+    T1, total1 : (1,); lo1/hi1/valid1 : (1, K) — the policy problem args
+
+    Feasibility is guarded IN-SCAN: a cycle whose capacity state cannot
+    absorb the sample budget latches a ``dead`` flag; that cycle and every
+    later one pass the params (and drift state) through untouched, so the
+    scan never trains through a neutralized allocation. The per-cycle
+    ``feas`` flags are returned for the host to raise on.
+
+    Must run under ``enable_x64`` so the allocation math stays f64 while
+    training stays f32 (exogenous drift draws are f32-pinned either way,
+    so the traced rows track ``CapacityDrift.coefficient_path`` to 1 f32
+    ULP — and ``QueueDrift.rollout`` bitwise — and yield the same integer
+    allocations).
+
+    Returns ``((params, state, dead), (accs, taus, ds, feas))`` with
+    per-cycle stacked outputs."""
     from repro.kernels import ops
 
     total = xs.shape[1]
     k = c2b.shape[1]
+    state_coupled = is_state_coupled(drift)
 
-    def one_cycle(p, inp):
+    def one_cycle(carry, inp):
+        p, qstate, dead = carry
         x_flat, y_flat, cyc = inp
         if drift is None:
             c2, c1, c0 = c2b, c1b, c0b
         else:
-            clock, rate = drift.factors_at(cyc, k)
+            if state_coupled:
+                clock, rate = drift.factors_at(cyc, k, qstate)
+            else:
+                clock, rate = drift.factors_at(cyc, k)
             c2 = c2b / clock.astype(c2b.dtype)[None]
             c1 = c1b / rate.astype(c1b.dtype)[None]
             c0 = c0b / rate.astype(c0b.dtype)[None]
@@ -331,32 +394,45 @@ def _fused_realloc_cycles(params, xs, ys, c2b, c1b, c0b, T1, total1, lo1, hi1,
             c2, c1, c0, T1, total1, lo1, hi1, valid1
         )
         tau, d, feas = tau_b[0], d_b[0], feas_b[0]
-        w = _weights_traced(tau, d, aggregation=aggregation, gamma=gamma)
+        ok = feas & jnp.logical_not(dead)
 
-        # split the flat draw into per-learner shards by the traced d —
-        # identical contents to the eager path's contiguous slicing
-        off = jnp.cumsum(d) - d
-        j = jnp.arange(d_cap, dtype=d.dtype)
-        gidx = off[:, None] + j[None, :]
-        m = j[None, :] < d[:, None]
-        safe = jnp.clip(gidx, 0, total - 1)
-        x = jnp.take(x_flat, safe, axis=0)          # (K, d_cap, F)
-        y = jnp.take(y_flat, safe, axis=0)          # (K, d_cap)
+        def do_cycle(p):
+            w = _weights_traced(tau, d, aggregation=aggregation, gamma=gamma)
+            # split the flat draw into per-learner shards by the traced d —
+            # identical contents to the eager path's contiguous slicing
+            off = jnp.cumsum(d) - d
+            j = jnp.arange(d_cap, dtype=d.dtype)
+            gidx = off[:, None] + j[None, :]
+            m = j[None, :] < d[:, None]
+            safe = jnp.clip(gidx, 0, total - 1)
+            x = jnp.take(x_flat, safe, axis=0)          # (K, d_cap, F)
+            y = jnp.take(y_flat, safe, axis=0)          # (K, d_cap)
 
-        locals_ = _local_train_dynamic(
-            p, x, y, m.astype(jnp.float32), tau, lr, loss_fn=loss_fn,
-        )
-        new = jax.tree_util.tree_map(
-            lambda leaf: ops.fed_agg(
-                leaf, w, use_pallas=use_pallas, interpret=interpret
-            ),
-            locals_,
-        )
-        acc = eval_fn(new, eval_x, eval_y) if eval_fn is not None else jnp.float32(0)
-        return new, (acc, tau, d, feas)
+            locals_ = _local_train_dynamic(
+                p, x, y, m.astype(jnp.float32), tau, lr, loss_fn=loss_fn,
+            )
+            new = jax.tree_util.tree_map(
+                lambda leaf: ops.fed_agg(
+                    leaf, w, use_pallas=use_pallas, interpret=interpret
+                ),
+                locals_,
+            )
+            acc = (eval_fn(new, eval_x, eval_y).astype(jnp.float32)
+                   if eval_fn is not None else jnp.float32(0))
+            return new, acc
+
+        def skip_cycle(p):
+            return p, jnp.float32(0)
+
+        p_new, acc = jax.lax.cond(ok, do_cycle, skip_cycle, p)
+        if state_coupled:
+            q_new = drift.state_update(cyc, qstate, tau, d)
+            qstate = jnp.where(ok, q_new, qstate)
+        return (p_new, qstate, dead | ~feas), (acc, tau, d, feas)
 
     cycle_idx = jnp.arange(xs.shape[0])
-    return jax.lax.scan(one_cycle, params, (xs, ys, cycle_idx))
+    carry0 = (params, state0, jnp.zeros((), bool))
+    return jax.lax.scan(one_cycle, carry0, (xs, ys, cycle_idx))
 
 
 class Orchestrator:
@@ -463,11 +539,40 @@ class Orchestrator:
         # schemes without a policy (slsqp, sync) keep the legacy per-problem
         # re-solve, which only reacts to drift-free problem changes.
         coeff_path = None
+        rollout = None
+        if (reallocate and is_state_coupled(self.drift)
+                and self.mel.scheme not in TRACED_POLICIES):
+            # the legacy per-problem re-solve below cannot see drifted
+            # capacities at all: silently simulating static capacities
+            # would mislabel the run (the async engine and
+            # coefficient_rows reject this configuration too)
+            raise ValueError(
+                "state-coupled drift needs a traced policy scheme "
+                f"({' | '.join(TRACED_POLICIES)}); scheme "
+                f"{self.mel.scheme!r} has none"
+            )
         if reallocate and self.mel.scheme in TRACED_POLICIES:
-            coeff_path = self._coefficient_path(cycles)
+            if is_state_coupled(self.drift):
+                # rows depend on the allocations: roll both out together
+                # (the host twin of the fused scan's coupled carry).
+                # Lazy: each cycle solves right before it trains, so an
+                # infeasible cycle raises AFTER the feasible prefix ran —
+                # the same params-state contract as the fused in-scan
+                # guard.
+                rollout = solve_rows_state_coupled(
+                    self.mel.scheme, self.drift, self.problem, cycles,
+                    label="drifted capacities at cycle {}", lazy=True,
+                )
+            else:
+                coeff_path = self._coefficient_path(cycles)
         history = []
         for c in range(cycles):
-            if coeff_path is not None:
+            if rollout is not None:
+                _, _, _, tau_c, d_c = next(rollout)
+                self.allocation = Allocation(
+                    tau=tau_c, d=d_c, method=f"{self.mel.scheme}_drift",
+                )
+            elif coeff_path is not None:
                 self.allocation = self._reallocate_cycle(coeff_path, c)
             elif reallocate and c:
                 self.allocation = SCHEMES[self.mel.scheme](self.problem)
@@ -495,17 +600,37 @@ class Orchestrator:
         """Fused scan-over-cycles twin of ``run``: same shard draws, same
         allocation, one jitted lax.scan instead of C host round-trips.
 
-        ``eval_fn`` here must be jit-traceable with signature
-        ``eval_fn(params, x, y) -> scalar`` (e.g. ``mlp.accuracy``) and is
-        evaluated inside the scan on ``eval_batch = (x, y)``; pass None to
-        skip per-cycle eval.
+        Parameters
+        ----------
+        train : Dataset to draw per-cycle shards from (identical rng
+            consumption to the eager path for the same engine seed).
+        cycles : number of global cycles C to scan over.
+        eval_fn : optional jit-traceable ``(params, x, y) -> scalar``
+            (e.g. ``mlp.accuracy``), evaluated inside the scan each cycle
+            on ``eval_batch``; None skips per-cycle eval.
+        eval_batch : ``(x, y)`` arrays; required with ``eval_fn``.
+        use_pallas, interpret : route the ``ops.fed_agg`` aggregation
+            contraction through the Pallas TPU kernel (``interpret=True``
+            emulates it on CPU).
+        reallocate : re-solve the allocation INSIDE the scan each cycle on
+            that cycle's capacity state via the traced
+            ``batched_policy(mel.scheme)`` — still one XLA program, zero
+            per-cycle host round-trips. With a ``CapacityDrift`` the rows
+            are generated in-scan from ``factors_at`` on the traced cycle
+            index; with a state-coupled ``QueueDrift`` additionally from
+            the drift state carried through the scan (no host coefficient
+            path enters the program in either case). The tau/d history and
+            shard contents reproduce the eager ``run(reallocate=True)``
+            path exactly for the same seed. Feasibility is guarded
+            in-scan: an infeasible cycle stops all further updates and the
+            call raises ValueError naming it, with ``self.params`` holding
+            the state trained through the feasible prefix.
 
-        ``reallocate=True`` re-solves the allocation INSIDE the scan each
-        cycle on that cycle's (drifted) capacity state via the traced
-        ``batched_policy(mel.scheme)`` — still one XLA program, no
-        per-cycle host round-trips; the tau/d history and shard contents
-        reproduce the eager ``run(reallocate=True)`` path exactly for the
-        same seed.
+        Returns
+        -------
+        One history dict per cycle (tau, d, staleness metrics, elapsed
+        virtual time, and ``accuracy`` when ``eval_fn`` is given) —
+        the same rows the eager ``run`` produces.
         """
         if reallocate:
             return self._run_fused_realloc(
@@ -595,25 +720,13 @@ class Orchestrator:
         c1b = np.asarray(tm.c1[None], np.float64)
         c0b = np.asarray(tm.c0[None], np.float64)
 
-        # fail fast on an infeasible drifted cycle (same residual-at-zero
-        # criterion the in-scan policy applies) BEFORE the scan trains
-        # through neutralized allocations and the params buffer is donated;
-        # the post-scan feasibility flags stay as a backstop for integer
-        # repair failures the relaxed test cannot see. This host replay of
-        # the drift path (cheap scalar math) is the only remaining
-        # coefficient_path consumer on the fused route — the scan itself
-        # regenerates the rows from ``factors_at`` on the traced index.
-        c2s, c1s, c0s = self._coefficient_path(cycles)
-        with np.errstate(divide="ignore", invalid="ignore"):
-            absorb = np.clip(
-                (prob.T - c0s) / c1s, float(prob.d_lower), float(prob.d_upper)
-            ).sum(axis=1)
-        bad = np.flatnonzero(absorb - prob.total_samples < -1e-9)
-        if bad.size:
-            raise ValueError(
-                "infeasible: even with tau=0 the deadline T cannot absorb "
-                f"d samples (drifted capacities at cycle {int(bad[0])})"
-            )
+        # Feasibility is guarded IN-SCAN (see _fused_realloc_cycles): an
+        # infeasible cycle latches the scan dead so no training runs on a
+        # neutralized allocation, and the host raises from the returned
+        # flags below. No host coefficient path enters the fused route at
+        # all — the scan regenerates every row from ``factors_at`` on the
+        # traced cycle index (and the carried state for a state-coupled
+        # drift, which a host pre-check could not replay).
 
         # d_k <= d_upper bounds the shard split width (tau needs no static
         # bound: the dynamic trainer while-loops to each cycle's traced max)
@@ -634,9 +747,12 @@ class Orchestrator:
         ex = jnp.asarray(eval_batch[0]) if eval_fn is not None else None
         ey = jnp.asarray(eval_batch[1]) if eval_fn is not None else None
 
+        state0 = (self.drift.state_init(len(tm.c2))
+                  if is_state_coupled(self.drift)
+                  else jnp.zeros((0,), jnp.float32))
         with enable_x64():
-            self.params, (accs, taus, ds, feas) = _fused_realloc_cycles(
-                self.params, jnp.asarray(xs), jnp.asarray(ys),
+            (params, _, _), (accs, taus, ds, feas) = _fused_realloc_cycles(
+                self.params, state0, jnp.asarray(xs), jnp.asarray(ys),
                 jnp.asarray(c2b), jnp.asarray(c1b), jnp.asarray(c0b),
                 jnp.asarray(T1), jnp.asarray(total1), jnp.asarray(lo1),
                 jnp.asarray(hi1), jnp.asarray(valid1),
@@ -647,6 +763,11 @@ class Orchestrator:
                 aggregation=self.mel.aggregation, drift=self.drift,
                 use_pallas=use_pallas, interpret=interpret,
             )
+            # the input params buffer was donated: re-point at the scan
+            # carry BEFORE any raise so the orchestrator stays usable (the
+            # in-scan dead-latch guarantees it holds the params trained
+            # through the feasible prefix only)
+            self.params = params
             accs, taus, ds, feas = (np.asarray(a) for a in (accs, taus, ds, feas))
         if not feas.all():
             bad = int(np.flatnonzero(~feas)[0])

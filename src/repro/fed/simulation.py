@@ -379,10 +379,14 @@ def run_async_experiment(
     the three modes share one code path and one rng discipline),
     ``"fedasync"`` mixes per upload with version-staleness discounting,
     ``"buffered"`` flushes a size-M buffer (default M = K/2, min 2).
-    ``bucketed=True`` routes through the device-resident time-bucket scan
-    (event modes only; ``num_buckets=0`` asks the engine for the smallest
-    exact grid). Pass ``problem`` to override the default MNIST-constants
-    environment (``build_problem``) with a custom fleet.
+    ``bucketed=True`` routes through the device-resident scan (event
+    modes only): ``num_buckets=0`` (default) takes the exact
+    event-indexed path (``run_events``, no grid needed);
+    ``num_buckets > 0`` forces the legacy fixed grid (``run_bucketed``,
+    benchmarking only). Pass ``problem`` to override the default
+    MNIST-constants environment (``build_problem``) with a custom fleet.
+    ``drift`` accepts a ``CapacityDrift`` or, with ``reallocate=True``, a
+    state-coupled ``QueueDrift``.
     """
     from repro.fed.async_engine import (
         AsyncConfig, AsyncFedEngine, summarize_async_history,
@@ -421,13 +425,16 @@ def run_async_experiment(
                 "path is Orchestrator.run_fused (run_experiment(fused="
                 "True)); bucketed=True applies to the event-driven modes"
             )
-        nb = num_buckets or eng.suggest_num_buckets(
-            train, horizon, max_events=max_events
-        )
-        history = eng.run_bucketed(
-            train, horizon, nb, eval_fn=mlp.accuracy, eval_batch=eval_batch,
-            strict=strict, max_events=max_events,
-        )
+        if num_buckets:
+            history = eng.run_bucketed(
+                train, horizon, num_buckets, eval_fn=mlp.accuracy,
+                eval_batch=eval_batch, strict=strict, max_events=max_events,
+            )
+        else:
+            history = eng.run_events(
+                train, horizon, eval_fn=mlp.accuracy, eval_batch=eval_batch,
+                max_events=max_events,
+            )
     else:
         history = eng.run(
             train, horizon, eval_fn=mlp.accuracy, eval_batch=eval_batch,

@@ -3,8 +3,12 @@
 Pins the acceptance contracts of the subsystem:
   * buffered mode with M = K and a cycle barrier reproduces the paper-scheme
     ``Orchestrator.run`` tau/d/staleness history (and params) exactly;
-  * the bucketed ``lax.scan`` fast path matches the eager event loop's
-    aggregation sequence to float tolerance;
+  * the event-indexed (jagged) ``run_events`` fast path replays the eager
+    event loop EXACTLY on every schedule — including the tied/near-tie
+    completion times of a KKT allocator, which the legacy fixed grid could
+    only handle via ``strict=False`` merging or not at all;
+  * the legacy fixed-grid ``run_bucketed`` path still matches the eager
+    loop when the grid resolves individual arrivals;
   * version staleness, the FedAsync discount functions, and the schedule's
     virtual-clock bookkeeping behave as specified.
 """
@@ -14,12 +18,13 @@ import pytest
 
 import jax
 
-from repro.core import AllocationProblem, CapacityDrift, TimeModel
+from repro.core import AllocationProblem, CapacityDrift, QueueDrift, TimeModel
 from repro.core.staleness import staleness_factor
 from repro.data.pipeline import synthetic_mnist
 from repro.fed.async_engine import (
     AsyncConfig,
     AsyncFedEngine,
+    _event_segments,
     summarize_async_history,
 )
 from repro.fed.orchestrator import MELConfig, Orchestrator
@@ -29,6 +34,8 @@ from repro.fed.simulation import (
     run_async_experiment,
 )
 from repro.models import mlp
+
+from tests._prop import given, settings, st
 
 
 @pytest.fixture(scope="module")
@@ -44,6 +51,60 @@ def _assert_trees_equal(a, b, **kw):
             np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
         else:
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _tied_problem(k: int = 3) -> AllocationProblem:
+    """A homogeneous fleet: every learner completes at the bitwise-same
+    virtual time, so NO time grid separates the arrivals (the regime the
+    fixed-grid path cannot represent at all)."""
+    tm = TimeModel(c2=np.full(k, 0.04), c1=np.full(k, 0.004),
+                   c0=np.full(k, 0.4))
+    return AllocationProblem(time_model=tm, T=6.0, total_samples=60,
+                             d_lower=10, d_upper=40)
+
+
+def _near_tie_problem() -> AllocationProblem:
+    """A KKT near-tie fleet: capacities differ by ~1e-7 relative, so the
+    completion gaps are microscopic and resolving them on a uniform grid
+    needs millions of buckets (``suggest_num_buckets`` raises > cap) —
+    the regime that previously forced ``strict=False`` merging."""
+    eps = np.array([0.0, 1e-7, 2.3e-7])
+    tm = TimeModel(c2=0.04 * (1 + eps), c1=np.full(3, 0.004),
+                   c0=np.full(3, 0.4))
+    return AllocationProblem(time_model=tm, T=6.0, total_samples=60,
+                             d_lower=10, d_upper=40)
+
+
+def _run_both(cfg, prob, train, horizon, *, seed=2, drift=None,
+              eval_fn=None, eval_batch=None):
+    """Run the eager loop and the event-indexed scan from the same seed
+    and return (eager_engine, eager_hist, jagged_engine, jagged_hist)."""
+    params = mlp.init(jax.random.key(1))
+    e1 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed, drift=drift)
+    h1 = e1.run(train, horizon, eval_fn=eval_fn, eval_batch=eval_batch)
+    e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed, drift=drift)
+    h2 = e2.run_events(train, horizon, eval_fn=eval_fn,
+                       eval_batch=eval_batch)
+    return e1, h1, e2, h2
+
+
+def _assert_history_match(h1, h2, *, acc_atol=None):
+    """Versions, learners, staleness and weights must match BITWISE (both
+    paths consume one shared schedule); accuracies to float tolerance."""
+    assert len(h1) == len(h2)
+    for r1, r2 in zip(h1, h2):
+        assert r1["learners"] == r2["learners"]
+        assert r1["staleness_list"] == r2["staleness_list"]
+        assert r1["server_version"] == r2["server_version"]
+        np.testing.assert_array_equal(r1["weights"], r2["weights"])
+        np.testing.assert_array_equal(r1["tau"], r2["tau"])
+        np.testing.assert_array_equal(r1["d"], r2["d"])
+        assert r1["keep"] == r2["keep"]
+    if acc_atol is not None:
+        np.testing.assert_allclose(
+            [r["accuracy"] for r in h1], [r["accuracy"] for r in h2],
+            atol=acc_atol,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -204,7 +265,8 @@ def test_bucketed_matches_eager_fedasync(data):
     h1 = e1.run(train, 18.0, eval_fn=mlp.accuracy,
                 eval_batch=(test.x[:400], test.y[:400]))
     e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
-    nb = e2.suggest_num_buckets(train, 18.0)
+    with pytest.warns(DeprecationWarning, match="run_events"):
+        nb = e2.suggest_num_buckets(train, 18.0)
     h2 = e2.run_bucketed(train, 18.0, nb, eval_fn=mlp.accuracy,
                          eval_batch=(test.x[:400], test.y[:400]))
 
@@ -231,7 +293,9 @@ def test_bucketed_matches_eager_buffered(data):
     e1 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
     h1 = e1.run(train, 18.0)
     e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
-    h2 = e2.run_bucketed(train, 18.0, e2.suggest_num_buckets(train, 18.0))
+    with pytest.warns(DeprecationWarning, match="run_events"):
+        nb = e2.suggest_num_buckets(train, 18.0)
+    h2 = e2.run_bucketed(train, 18.0, nb)
     assert [r["learners"] for r in h1] == [r["learners"] for r in h2]
     _assert_trees_equal(e1.params, e2.params, atol=1e-5)
 
@@ -265,8 +329,9 @@ def test_suggest_num_buckets_rejects_exact_ties(data):
                              d_lower=10, d_upper=40)
     eng = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
                          mlp.init(jax.random.key(0)), seed=0)
-    with pytest.raises(ValueError, match="tie EXACTLY"):
-        eng.suggest_num_buckets(train, 12.0)
+    with pytest.warns(DeprecationWarning, match="run_events"):
+        with pytest.raises(ValueError, match="tie EXACTLY"):
+            eng.suggest_num_buckets(train, 12.0)
 
 
 def test_bucketed_strict_false_merges_collisions(data):
@@ -294,6 +359,134 @@ def test_bucketed_strict_false_merges_collisions(data):
     assert h2[-1]["accuracy"] > acc0
     for leaf in jax.tree_util.tree_leaves(e2.params):
         assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ---------------------------------------------------------------------------
+# event-indexed (jagged) fast path == eager event loop, with NO grid caveats
+# ---------------------------------------------------------------------------
+
+def test_run_events_matches_eager_spread(data):
+    """On a well-spread schedule run_events reproduces run: metadata
+    bitwise, params and accuracies to float tolerance."""
+    train, test = data
+    prob = spread_problem()
+    for cfg in (AsyncConfig(mode="fedasync", alpha=0.6),
+                AsyncConfig(mode="buffered", buffer_size=2)):
+        e1, h1, e2, h2 = _run_both(
+            cfg, prob, train, 18.0, eval_fn=mlp.accuracy,
+            eval_batch=(test.x[:400], test.y[:400]),
+        )
+        _assert_history_match(h1, h2, acc_atol=2e-3)
+        _assert_trees_equal(e1.params, e2.params, atol=1e-5)
+
+
+def test_run_events_exact_on_tied_schedule(data):
+    """ACCEPTANCE: a homogeneous fleet completes at bitwise-identical
+    times — the fixed grid rejects the schedule outright
+    (suggest_num_buckets raises, buffered buckets are unrepresentable) —
+    yet the event-indexed path replays the eager loop exactly in BOTH
+    server modes."""
+    train, test = data
+    prob = _tied_problem()
+    probe = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
+                           mlp.init(jax.random.key(0)), seed=2)
+    with pytest.warns(DeprecationWarning, match="run_events"):
+        with pytest.raises(ValueError, match="tie EXACTLY"):
+            probe.suggest_num_buckets(train, 12.0)
+    for cfg in (AsyncConfig(mode="fedasync", alpha=0.6),
+                AsyncConfig(mode="buffered", buffer_size=2)):
+        e1, h1, e2, h2 = _run_both(
+            cfg, prob, train, 12.0, eval_fn=mlp.accuracy,
+            eval_batch=(test.x[:400], test.y[:400]),
+        )
+        assert len(h1) > 0
+        _assert_history_match(h1, h2, acc_atol=2e-3)
+        _assert_trees_equal(e1.params, e2.params, atol=1e-5)
+
+
+def test_run_events_exact_on_near_tie_kkt(data):
+    """ACCEPTANCE: on a KKT near-tie schedule (completion gaps ~1e-6 of
+    the horizon) the old grid needs millions of buckets — past the cap,
+    i.e. the regime that previously required strict=False — while
+    run_events matches the eager loop exactly (tau/d/staleness history
+    and weights/versions bitwise, params within float tolerance)."""
+    train, test = data
+    prob = _near_tie_problem()
+    probe = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
+                           mlp.init(jax.random.key(0)), seed=2)
+    with pytest.warns(DeprecationWarning, match="run_events"):
+        with pytest.raises(ValueError, match="buckets"):
+            probe.suggest_num_buckets(train, 12.0)
+    e1, h1, e2, h2 = _run_both(
+        AsyncConfig(mode="fedasync", alpha=0.6), prob, train, 12.0,
+        eval_fn=mlp.accuracy, eval_batch=(test.x[:400], test.y[:400]),
+    )
+    assert len(h1) >= 6
+    _assert_history_match(h1, h2, acc_atol=2e-3)
+    _assert_trees_equal(e1.params, e2.params, atol=1e-5)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**16), alpha=st.floats(0.2, 0.9),
+       fn=st.sampled_from(["constant", "hinge", "poly"]),
+       buffered=st.sampled_from([0, 2]))
+def test_run_events_matches_eager_property(seed, alpha, fn, buffered):
+    """Property: across engine seeds (shard draws), mixing rates,
+    staleness discounts and server modes, the jagged replay of a near-tie
+    KKT schedule stays exact (the case the old fixed grid could not
+    represent). Mirrors the seed-pin style of test_aggregation_props."""
+    train, _ = synthetic_mnist(1200, n_test=50, seed=1)
+    prob = _near_tie_problem()
+    cfg = (AsyncConfig(mode="buffered", buffer_size=buffered, alpha=alpha,
+                       staleness_fn=fn)
+           if buffered else
+           AsyncConfig(mode="fedasync", alpha=alpha, staleness_fn=fn))
+    e1, h1, e2, h2 = _run_both(cfg, prob, train, 12.0, seed=seed)
+    assert len(h1) > 0
+    _assert_history_match(h1, h2)
+    _assert_trees_equal(e1.params, e2.params, atol=1e-5)
+
+
+def test_event_segments_invariants(data):
+    """The jagged partition: at most one arrival per learner per segment,
+    at most one flush per segment and always last, fedasync segments are
+    singletons, and every aggregated arrival appears exactly once."""
+    train, _ = data
+    prob = _tied_problem()
+    for cfg in (AsyncConfig(mode="fedasync"),
+                AsyncConfig(mode="buffered", buffer_size=2)):
+        eng = AsyncFedEngine(cfg, prob, mlp.loss,
+                             mlp.init(jax.random.key(0)), seed=2)
+        from repro.data.pipeline import FederatedPartitioner
+
+        part = FederatedPartitioner(train, seed=0)
+        sched = eng._build_schedule(part, 12.0, 100_000)
+        segs = _event_segments(sched.arrivals)
+        seen = []
+        for evs in segs:
+            learners = [a.learner for a in evs]
+            assert len(set(learners)) == len(learners)
+            flush_pos = [i for i, a in enumerate(evs) if a.flush]
+            assert len(flush_pos) <= 1
+            if flush_pos:
+                assert flush_pos[0] == len(evs) - 1
+            if cfg.mode == "fedasync":
+                assert len(evs) == 1 and evs[0].flush
+            seen.extend(a.seq for a in evs)
+        kept = [a.seq for a in sched.arrivals if a.flush_id >= 0]
+        assert sorted(seen) == kept
+
+
+def test_run_async_experiment_bucketed_routes_to_jagged(data):
+    """bucketed=True with num_buckets=0 takes the event-indexed path: it
+    must succeed on a tied schedule no grid can represent."""
+    train, test = data
+    res = run_async_experiment(
+        mode="fedasync", cycles=2, problem=_tied_problem(), train=train,
+        test=test, seed=2, bucketed=True,
+    )
+    assert res["final_accuracy"] is not None
+    assert res["summary"]["aggregations"] > 0
 
 
 def test_run_async_experiment_modes(data):

