@@ -1,0 +1,48 @@
+"""Churn-robustness benchmark: adaptive KKT vs static/equal allocation as
+client dropout and upload faults rise.
+
+Runs ``fed.simulation.churn_sweep`` — Markov on/off availability plus a
+compound fault schedule (dropped/delayed uploads, stragglers,
+deadline-retry redispatch, quorum-degraded buffered flushes) — through
+the exact event-indexed scan path at >= 3 dropout rates, and merges the
+rows into ``BENCH_alloc.json`` under the ``churn`` section.
+
+  PYTHONPATH=src python -m benchmarks.run --only churn
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.alloc_bench import _merge_out
+from repro.fed.simulation import build_spread_problem, churn_sweep
+
+
+def main(quick: bool = False) -> None:
+    drop_rates = (0.0, 0.2, 0.4) if quick else (0.0, 0.1, 0.2, 0.3, 0.4)
+    cycles = 10 if quick else 16
+    prob = build_spread_problem(k=4, total_samples=80)
+    t0 = time.time()
+    rows = churn_sweep(drop_rates, cycles=cycles, problem=prob, seed=0)
+    elapsed = time.time() - t0
+    for r in rows:
+        f = r["faults"]
+        print(
+            f"  rate={r['drop_rate']:.1f} {r['policy']:<8} "
+            f"acc={r['final_accuracy'] if r['final_accuracy'] is None else round(r['final_accuracy'], 4)} "
+            f"aggs={r['aggregations']:>3} stale(mean/p90/max)="
+            f"{r['staleness_mean']:.2f}/{r['staleness_p90']:.1f}/{r['staleness_max']} "
+            f"drops={f['drops']} retries={f['retries']} "
+            f"degraded={f['quorum_degradations']}"
+        )
+    _merge_out("churn", {
+        "mode": "buffered",
+        "cycles": cycles,
+        "drop_rates": list(drop_rates),
+        "sweep": rows,
+        "elapsed_s": round(elapsed, 2),
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,9 @@ Sections:
   async     event-driven async federation: cycle-gated vs FedAsync vs
             buffered under drift + eager-vs-bucketed engine wall-time
             (merges into BENCH_alloc.json)
+  churn     adaptive KKT vs static/equal allocation under client churn +
+            fault injection at rising dropout rates (merges into
+            BENCH_alloc.json)
   kernels   hot-spot micro-benchmarks
   roofline  per (arch x shape x mesh) roofline terms from dry-run artifacts
 """
@@ -26,6 +29,7 @@ from benchmarks import (
     accuracy_vs_cycles,
     alloc_bench,
     async_bench,
+    churn_bench,
     kernel_bench,
     roofline_report,
     solver_table,
@@ -38,6 +42,7 @@ SECTIONS = [
     ("alloc_bench", alloc_bench.main),
     ("realloc_bench", alloc_bench.realloc_main),
     ("async_bench", async_bench.main),
+    ("churn_bench", churn_bench.main),
     ("kernel_bench", kernel_bench.main),
     ("roofline_report", roofline_report.main),
     ("fig3_accuracy_vs_cycles", accuracy_vs_cycles.main),

@@ -28,9 +28,22 @@ Public surface (see ``docs/architecture.md`` for the layer map and
 * **Capacity dynamics** — ``CapacityDrift`` (exogenous per-cycle
   fading/jitter), ``QueueDrift`` (state-coupled backlog dynamics driven by
   the dispatched allocations), ``is_state_coupled`` (protocol probe).
+* **Availability** — ``MarkovAvailability`` / ``ActiveRateAvailability`` /
+  ``TraceAvailability`` (per-learner churn processes behind the drift
+  protocol, composable with a base capacity drift), ``availability_masks``,
+  ``has_availability`` / ``capacity_state_coupled`` (protocol probes),
+  ``apply_active_mask`` (offline-slot masking for the batched solve).
 """
 
 from repro.core.allocation import Allocation, AllocationProblem
+from repro.core.availability import (
+    ActiveRateAvailability,
+    MarkovAvailability,
+    TraceAvailability,
+    availability_masks,
+    capacity_state_coupled,
+    has_availability,
+)
 from repro.core.aggregation import aggregate, fedavg_weights, staleness_weights
 from repro.core.baselines import solve_eta, solve_synchronous
 from repro.core.complexity import ModelCost, mlp_cost, mnist_dnn_cost, transformer_cost
@@ -38,6 +51,7 @@ from repro.core.solver_batched import (
     TRACED_POLICIES,
     BatchedAllocation,
     BatchedProblems,
+    apply_active_mask,
     batched_avg_staleness,
     batched_max_staleness,
     batched_policy,
@@ -68,8 +82,15 @@ from repro.core.time_model import (
 )
 
 __all__ = [
+    "ActiveRateAvailability",
     "Allocation",
     "AllocationProblem",
+    "MarkovAvailability",
+    "TraceAvailability",
+    "apply_active_mask",
+    "availability_masks",
+    "capacity_state_coupled",
+    "has_availability",
     "TRACED_POLICIES",
     "BatchedAllocation",
     "BatchedProblems",

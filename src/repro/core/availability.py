@@ -1,0 +1,246 @@
+"""Per-learner availability (client churn) processes.
+
+The paper's allocator assumes every learner that is handed a task will
+return it; real edge fleets churn.  This module models *who is online*
+as a first-class process behind the same ``state_init / state_update /
+factors_at`` drift protocol that :class:`~repro.core.time_model.QueueDrift`
+uses, plus one extra method, ``online_at(cycle, k, state) -> (K,) bool``.
+Three processes are provided:
+
+- :class:`MarkovAvailability` — seeded two-state Markov chain per
+  learner (P(online -> offline) = ``p_drop``, P(offline -> online) =
+  ``p_join``), the classic intermittent-client model.
+- :class:`ActiveRateAvailability` — each learner draws a persistent
+  active rate from a clipped lognormal once, then is online i.i.d.
+  Bernoulli(rate) per block: a heavy-tailed "some phones are almost
+  never plugged in" fleet.
+- :class:`TraceAvailability` — an explicit ``(C, K)`` boolean schedule,
+  wrapped periodically, for replaying measured uptime traces.
+
+Each process optionally wraps a *base* capacity drift
+(:class:`~repro.core.time_model.CapacityDrift` or
+:class:`~repro.core.time_model.QueueDrift`): ``factors_at`` delegates to
+the base so churn composes with time-varying capacity.  The joint state
+is the pytree ``(avail_state, base_state)``.
+
+Masks are drawn with ``jax.random.fold_in`` keyed on the cycle index, in
+float32, with no transcendentals on the comparison path — the same
+discipline as ``CapacityDrift`` — so host and traced consumers see
+bitwise-identical masks.
+
+An offline learner is *masked out of the allocation solve* (see
+``apply_active_mask`` in ``solver_batched``) rather than making the
+fleet infeasible: its slot gets the ``BatchedProblems`` padded-slot
+semantics (``d_lo = d_hi = 0``, ``valid=False``) and the sample budget
+is clipped into the live fleet's box, so tau/d budget flows to the
+learners that can actually absorb it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.time_model import CapacityDrift, QueueDrift, is_state_coupled
+
+__all__ = [
+    "MarkovAvailability",
+    "ActiveRateAvailability",
+    "TraceAvailability",
+    "availability_masks",
+    "capacity_state_coupled",
+    "has_availability",
+]
+
+BaseDrift = Union[CapacityDrift, QueueDrift, None]
+
+
+def has_availability(drift) -> bool:
+    """True when ``drift`` models client availability (has ``online_at``)."""
+    return drift is not None and hasattr(drift, "online_at")
+
+
+def capacity_state_coupled(drift) -> bool:
+    """Whether the *capacity* rows of ``drift`` depend on past allocations.
+
+    For an availability process this looks through to the wrapped base
+    drift: churn alone does not couple capacities to allocations, so a
+    frozen (``reallocate=False``) schedule is still well defined under a
+    Markov on/off fleet — but not under a queue-backlogged one.
+    """
+    if has_availability(drift):
+        return is_state_coupled(drift.base)
+    return is_state_coupled(drift)
+
+
+class _AvailabilityBase:
+    """Protocol plumbing shared by the concrete availability processes.
+
+    Subclasses implement ``_avail_init(k)``, ``_avail_update(cycle,
+    avail)`` and ``_online(cycle, k, avail)``; this mixin composes that
+    per-learner on/off state with an optional base capacity drift.
+    """
+
+    base: BaseDrift
+
+    # -- drift protocol -------------------------------------------------
+    def state_init(self, k: int):
+        if is_state_coupled(self.base):
+            base_state = self.base.state_init(k)
+        else:
+            base_state = jnp.zeros((0,), jnp.float32)
+        return (self._avail_init(k), base_state)
+
+    def state_update(self, cycle: int, state, tau, d):
+        avail, base_state = state
+        if is_state_coupled(self.base):
+            base_state = self.base.state_update(cycle, base_state, tau, d)
+        return (self._avail_update(cycle, avail), base_state)
+
+    def factors_at(self, cycle: int, k: int, state):
+        _, base_state = state
+        if self.base is None:
+            ones = jnp.ones((k,), jnp.float32)
+            return ones, ones
+        if is_state_coupled(self.base):
+            return self.base.factors_at(cycle, k, base_state)
+        return self.base.factors_at(cycle, k)
+
+    # -- availability ---------------------------------------------------
+    def online_at(self, cycle: int, k: int, state):
+        """``(K,)`` bool: who is online during drift block ``cycle``."""
+        avail, _ = state
+        return self._online(cycle, k, avail)
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovAvailability(_AvailabilityBase):
+    """Two-state Markov on/off chain per learner, all online at block 0.
+
+    ``state_update(c, ...)`` draws block ``c + 1``'s occupancy from the
+    chain, so the mask a solve sees for block ``c`` is exactly the state
+    that entered it.
+    """
+
+    p_drop: float = 0.1
+    p_join: float = 0.5
+    seed: int = 0
+    base: BaseDrift = None
+
+    def __post_init__(self):
+        if not (0.0 <= self.p_drop <= 1.0):
+            raise ValueError("p_drop must be in [0, 1]")
+        if not (0.0 <= self.p_join <= 1.0):
+            raise ValueError("p_join must be in [0, 1]")
+
+    def _avail_init(self, k: int):
+        return jnp.ones((k,), jnp.float32)
+
+    def _avail_update(self, cycle: int, avail):
+        key = jax.random.fold_in(jax.random.key(self.seed), cycle + 1)
+        u = jax.random.uniform(key, avail.shape, jnp.float32)
+        on = avail > 0.5
+        nxt = jnp.where(on, u >= jnp.float32(self.p_drop), u < jnp.float32(self.p_join))
+        return nxt.astype(jnp.float32)
+
+    def _online(self, cycle: int, k: int, avail):
+        return avail > 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class ActiveRateAvailability(_AvailabilityBase):
+    """Persistent per-learner active rates, lognormal around ``median``.
+
+    Each learner draws ``rate_k = clip(median * exp(sigma * z_k), floor,
+    1)`` once (seeded), then is online i.i.d. Bernoulli(``rate_k``) per
+    block — occupancy is independent across blocks but heterogeneous
+    across the fleet.
+    """
+
+    median: float = 0.8
+    sigma: float = 0.5
+    floor: float = 0.05
+    seed: int = 0
+    base: BaseDrift = None
+
+    def __post_init__(self):
+        if not (0.0 < self.median <= 1.0):
+            raise ValueError("median must be in (0, 1]")
+        if self.sigma < 0.0:
+            raise ValueError("sigma must be >= 0")
+        if not (0.0 < self.floor <= 1.0):
+            raise ValueError("floor must be in (0, 1]")
+
+    def rates(self, k: int):
+        """``(K,)`` f32 persistent active rates, clipped to [floor, 1]."""
+        key = jax.random.fold_in(jax.random.key(self.seed), 2**31 - 1)
+        z = jax.random.normal(key, (k,), jnp.float32)
+        r = jnp.float32(self.median) * jnp.exp(jnp.float32(self.sigma) * z)
+        return jnp.clip(r, jnp.float32(self.floor), jnp.float32(1.0))
+
+    def _mask(self, cycle: int, k: int):
+        key = jax.random.fold_in(jax.random.key(self.seed), cycle)
+        u = jax.random.uniform(key, (k,), jnp.float32)
+        return (u < self.rates(k)).astype(jnp.float32)
+
+    def _avail_init(self, k: int):
+        return self._mask(0, k)
+
+    def _avail_update(self, cycle: int, avail):
+        return self._mask(cycle + 1, avail.shape[-1])
+
+    def _online(self, cycle: int, k: int, avail):
+        return avail > 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceAvailability(_AvailabilityBase):
+    """Replay an explicit ``(C, K)`` boolean uptime trace, wrapped
+    periodically past its horizon."""
+
+    trace: np.ndarray = None
+    base: BaseDrift = None
+
+    def __post_init__(self):
+        tr = np.asarray(self.trace, bool)
+        if tr.ndim != 2 or tr.shape[0] < 1:
+            raise ValueError("trace must be a (cycles, K) boolean schedule")
+        object.__setattr__(self, "trace", tr)
+
+    def _avail_init(self, k: int):
+        if k != self.trace.shape[1]:
+            raise ValueError(
+                f"trace covers {self.trace.shape[1]} learners, fleet has {k}"
+            )
+        return jnp.zeros((0,), jnp.float32)  # mask is read from the trace
+
+    def _avail_update(self, cycle: int, avail):
+        return avail
+
+    def _online(self, cycle: int, k: int, avail):
+        return self.trace[int(cycle) % self.trace.shape[0]]
+
+
+def availability_masks(drift, k: int, cycles: int, *, tau=None, d=None):
+    """``(cycles, K)`` bool mask rollout under a *frozen* allocation.
+
+    Steps the availability state with the given static ``(tau, d)``
+    (zeros by default — only a queue-coupled base ever reads them), for
+    the ``reallocate=False`` regime where the schedule is fixed up front
+    and churn evolves on its own.  For a joint masked-solve rollout use
+    ``solve_rows_availability`` in the orchestrator.
+    """
+    tau = np.zeros((k,), np.int64) if tau is None else np.asarray(tau)
+    d = np.zeros((k,), np.int64) if d is None else np.asarray(d)
+    tau_j, d_j = jnp.asarray(tau), jnp.asarray(d)
+    masks = np.zeros((cycles, k), bool)
+    state = drift.state_init(k)
+    for c in range(cycles):
+        masks[c] = np.asarray(drift.online_at(c, k, state))
+        state = drift.state_update(c, state, tau_j, d_j)
+    return masks

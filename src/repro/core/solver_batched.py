@@ -59,6 +59,7 @@ __all__ = [
     "batched_max_staleness",
     "batched_avg_staleness",
     "batched_summary",
+    "apply_active_mask",
 ]
 
 _INT_SENTINEL = 2**31 - 1
@@ -672,3 +673,28 @@ def solve_eta_batched(problems, *, x64: bool = True) -> BatchedAllocation:
         tau=tau.astype(np.int64), d=d.astype(np.int64), feasible=ok,
         valid=np.asarray(bp.valid, bool), method="eta_batched",
     )
+
+
+def apply_active_mask(total_i, d_lo, d_hi, valid, active):
+    """Project a ``(B, K)`` policy problem onto its online sub-fleet.
+
+    Offline slots get the padded-slot semantics of ``BatchedProblems``
+    (``d_lo = d_hi = 0``, ``valid=False``) so the policies skip them,
+    and the per-fleet sample budget is clipped into the live fleet's box
+    ``[sum d_lo, sum d_hi]`` — a thinned fleet serves what it can absorb
+    instead of going infeasible; an all-offline fleet degrades to a zero
+    budget.  Elementwise ``jnp`` only, so it is usable traced or on host
+    (run under ``enable_x64`` when exact integer budgets matter).
+
+    Returns ``(total, d_lo, d_hi, valid)`` with the same shapes/dtypes
+    as the inputs.
+    """
+    act = jnp.asarray(active, bool)
+    lo = jnp.where(act, d_lo, jnp.zeros((), jnp.asarray(d_lo).dtype))
+    hi = jnp.where(act, d_hi, jnp.zeros((), jnp.asarray(d_hi).dtype))
+    v = jnp.asarray(valid, bool) & act
+    total = jnp.asarray(total_i)
+    tot = jnp.clip(
+        total.astype(lo.dtype), jnp.sum(lo, axis=-1), jnp.sum(hi, axis=-1)
+    )
+    return tot.astype(total.dtype), lo, hi, v

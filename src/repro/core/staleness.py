@@ -114,11 +114,14 @@ def version_staleness_profile(staleness: np.ndarray) -> dict:
     run produced (one entry per aggregated upload)."""
     s = np.asarray(staleness, dtype=float)
     if s.size == 0:
-        return {"mean": 0.0, "max": 0, "p90": 0.0, "frac_stale": 0.0, "count": 0}
+        return {"mean": 0.0, "max": 0, "p50": 0.0, "p90": 0.0, "p99": 0.0,
+                "frac_stale": 0.0, "count": 0}
     return {
         "mean": float(s.mean()),
         "max": int(s.max()),
+        "p50": float(np.percentile(s, 50)),
         "p90": float(np.percentile(s, 90)),
+        "p99": float(np.percentile(s, 99)),
         "frac_stale": float((s > 0).mean()),
         "count": int(s.size),
     }

@@ -99,6 +99,11 @@ from repro.core.staleness import (
     staleness_factor,
     version_staleness_profile,
 )
+from repro.core.availability import (
+    availability_masks,
+    capacity_state_coupled,
+    has_availability,
+)
 from repro.data.pipeline import Dataset, FederatedPartitioner
 from repro.fed.orchestrator import (
     SCHEMES,
@@ -107,10 +112,16 @@ from repro.fed.orchestrator import (
     local_train,
     local_train_stacked,
     solve_policy_row,
+    solve_rows_availability,
     solve_rows_state_coupled,
 )
 
-__all__ = ["AsyncConfig", "AsyncFedEngine", "summarize_async_history"]
+__all__ = [
+    "AsyncConfig",
+    "AsyncFedEngine",
+    "FAULT_COUNTERS",
+    "summarize_async_history",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +132,18 @@ class AsyncConfig:
     ``barrier=True`` (buffered only, requires M = K) gates every round on
     the slowest learner and redispatches the whole fleet at the cycle
     boundary — the paper's scheme as a point in this family.
+
+    Fault injection (all off by default; any event mode, virtual-clock
+    seconds; see ``docs/robustness.md``): ``drop_rate`` loses uploads in
+    transit, ``delay_rate``/``delay_mean`` adds exponential transit
+    delay, ``straggler_rate``/``straggler_factor`` slows a dispatch's
+    whole computation, ``deadline`` bounds each dispatch server-side with
+    ``retry_backoff``-capped-exponential redispatch on a miss, and
+    ``quorum``/``flush_timeout`` lets a buffered server flush an
+    incomplete group (>= quorum arrivals at the timeout; below quorum it
+    extends once, then degrades and flushes whatever arrived rather than
+    stalling). ``barrier=True`` rejects every fault knob: the barrier is
+    the fault-free paper regime.
     """
 
     mode: str = "fedasync"             # fedasync | buffered
@@ -135,6 +158,26 @@ class AsyncConfig:
     lr: float = 0.1
     scheme: str = "kkt_sai"            # allocation policy at (re)dispatch
     reallocate: bool = False           # re-solve per drift block
+    # -- fault / churn injection (virtual-clock seconds) --------------------
+    drop_rate: float = 0.0             # P(an upload is lost in transit)
+    delay_rate: float = 0.0            # P(an upload is delayed in transit)
+    delay_mean: float = 1.0            # mean exponential transit delay (s)
+    straggler_rate: float = 0.0        # P(a dispatch straggles)
+    straggler_factor: float = 4.0      # straggler slowdown (>= 1)
+    deadline: float = 0.0              # per-dispatch deadline (s); 0 = off
+    retry_backoff: float = 1.0         # first redispatch backoff (s)
+    retry_backoff_cap: float = 8.0     # exponential backoff ceiling (s)
+    quorum: int = 0                    # buffered: min arrivals at timeout
+    flush_timeout: float = 0.0         # buffered: group deadline (s)
+
+    @property
+    def has_faults(self) -> bool:
+        """Whether any fault/churn knob is active (fault rng is only
+        drawn — and fault events only scheduled — when this is True, so
+        fault-free schedules consume the historical rng stream)."""
+        return (self.drop_rate > 0 or self.delay_rate > 0
+                or self.straggler_rate > 0 or self.deadline > 0
+                or self.quorum > 0)
 
     def __post_init__(self):
         if self.mode not in ("fedasync", "buffered"):
@@ -151,6 +194,39 @@ class AsyncConfig:
         if self.barrier and self.mode != "buffered":
             raise ValueError("barrier=True is the buffered (M=K) regime; "
                              "fedasync has no cycle gate")
+        for name in ("drop_rate", "delay_rate", "straggler_rate"):
+            if not (0.0 <= getattr(self, name) <= 1.0):
+                raise ValueError(f"{name} must be a probability in [0, 1]")
+        if self.straggler_factor < 1.0:
+            raise ValueError("straggler_factor must be >= 1 (a straggler "
+                             "is slower, never faster)")
+        if self.delay_rate > 0 and self.delay_mean <= 0:
+            raise ValueError("delay_rate > 0 needs delay_mean > 0")
+        if self.deadline < 0:
+            raise ValueError("deadline must be >= 0 (0 disables it)")
+        if self.deadline > 0 and self.retry_backoff <= 0:
+            raise ValueError("deadline retries need retry_backoff > 0")
+        if self.retry_backoff_cap < self.retry_backoff:
+            raise ValueError("retry_backoff_cap must be >= retry_backoff")
+        if self.quorum < 0:
+            raise ValueError("quorum must be >= 0 (0 disables timer flushes)")
+        if self.quorum > 0:
+            if self.mode != "buffered":
+                raise ValueError("quorum applies to buffered flushes only; "
+                                 "fedasync flushes every arrival already")
+            if self.flush_timeout <= 0:
+                raise ValueError("quorum > 0 needs flush_timeout > 0 (the "
+                                 "group deadline that triggers the quorum "
+                                 "check)")
+        elif self.flush_timeout > 0:
+            raise ValueError("flush_timeout without quorum has no effect; "
+                             "set quorum >= 1")
+        if self.barrier and self.has_faults:
+            raise ValueError(
+                "barrier=True is the fault-free paper regime (every round "
+                "gates on the full fleet); fault injection needs the "
+                "event-driven modes"
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +250,10 @@ class _Arrival:
     staleness: int           # server_version - dispatch_version at arrival
     version_after: int = 0
     flush: bool = False      # this arrival closes a flush
+    timer_flush: bool = False  # the flush fired on a quorum timer, AFTER
+    #                          this arrival redispatched (pre-flush server)
+    flush_t: float = 0.0     # virtual time the flush applied (= t unless
+    #                          a quorum timer closed the group later)
     keep: float = 1.0        # server self-weight at the flush
     weight: float = 0.0      # this local model's coefficient in its flush
     flush_id: int = -1
@@ -186,6 +266,21 @@ class _Schedule:
     n_flushes: int
     d_cap: int               # max d over arrivals (>= 1)
     max_tau: int             # max tau over arrivals (>= 1)
+    counters: dict = dataclasses.field(default_factory=dict)
+
+
+FAULT_COUNTERS = (
+    "dispatches", "drops", "delays", "stragglers", "deadline_misses",
+    "retries", "late_discards", "quorum_flushes", "quorum_extensions",
+    "quorum_degradations", "offline_deferrals", "offline_churned",
+)
+
+
+def _zero_fault_counters() -> dict:
+    return {key: 0 for key in FAULT_COUNTERS}
+
+
+_EV_ARRIVE, _EV_DEADLINE, _EV_QUORUM = 0, 1, 2   # heap tie-break priority
 
 
 def _event_segments(arrivals: "list[_Arrival]") -> "list[list[_Arrival]]":
@@ -268,7 +363,23 @@ class AsyncFedEngine:
                 f"buffer_size == K (= {k}); M < K is the event-driven "
                 "buffered regime"
             )
-        if is_state_coupled(drift) and not cfg.reallocate:
+        if cfg.quorum > self.buffer_size:
+            raise ValueError(
+                f"quorum (= {cfg.quorum}) must be <= buffer_size "
+                f"(= {self.buffer_size}): a full buffer flushes on its own"
+            )
+        if has_availability(drift):
+            if cfg.barrier:
+                raise ValueError(
+                    "availability churn has no barrier regime (one offline "
+                    "learner would gate every round forever); use the "
+                    "event-driven modes, or the Orchestrator for the "
+                    "fault-free paper scheme"
+                )
+            coupled = capacity_state_coupled(drift)
+        else:
+            coupled = is_state_coupled(drift)
+        if coupled and not cfg.reallocate:
             raise ValueError(
                 "state-coupled drift ties capacities to the dispatched "
                 "allocations; the async engine supports it only with "
@@ -280,6 +391,9 @@ class AsyncFedEngine:
         self.allocation = SCHEMES[cfg.scheme](problem)
         self._alloc_cache: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._static_alloc: tuple[np.ndarray, np.ndarray] | None = None
+        self._block_masks: np.ndarray | None = None
+        # fault/churn tallies of the LAST schedule built by a run method
+        self.fault_counters: dict = _zero_fault_counters()
 
     # -- capacities & allocation --------------------------------------------
     def _block_rows(self, nblocks: int):
@@ -288,16 +402,38 @@ class AsyncFedEngine:
         orchestrator's exact re-solves. A state-coupled drift has no
         standalone row path (its rows depend on the allocations), so rows
         and per-block solves are rolled out jointly and the allocation
-        cache prefilled."""
-        if is_state_coupled(self.drift):
+        cache prefilled. An availability process additionally yields the
+        per-block online masks (``self._block_masks``) that gate
+        dispatching: adaptive runs solve each block masked
+        (``solve_rows_availability``); frozen runs dispatch the static
+        base allocation whenever a learner is online, with the masks
+        rolled out under that frozen allocation."""
+        drift = self.drift
+        self._block_masks = None
+        if has_availability(drift):
+            if self.cfg.reallocate:
+                rows, (taus, ds), masks = solve_rows_availability(
+                    self.cfg.scheme, drift, self.problem, nblocks,
+                    label="capacities at drift block {}",
+                )
+                for b in range(nblocks):
+                    self._alloc_cache[b] = (taus[b], ds[b])
+                self._block_masks = masks
+                return rows
+            tau0, d0 = self._alloc_base()
+            self._block_masks = availability_masks(
+                drift, self.problem.num_learners, nblocks, tau=tau0, d=d0,
+            )
+            return coefficient_rows(self.problem, drift.base, nblocks)
+        if is_state_coupled(drift):
             rows, (taus, ds) = solve_rows_state_coupled(
-                self.cfg.scheme, self.drift, self.problem, nblocks,
+                self.cfg.scheme, drift, self.problem, nblocks,
                 label="capacities at drift block {}",
             )
             for b in range(nblocks):
                 self._alloc_cache[b] = (taus[b], ds[b])
             return rows
-        return coefficient_rows(self.problem, self.drift, nblocks)
+        return coefficient_rows(self.problem, drift, nblocks)
 
     def _solve_row(self, c2r, c1r, c0r, *, label) -> tuple[np.ndarray, np.ndarray]:
         """Fleet allocation (tau, d) on one (K,) capacity row, through the
@@ -338,45 +474,178 @@ class AsyncFedEngine:
         """Simulate the full event system WITHOUT touching model values:
         completion times, version bookkeeping, per-dispatch shard draws and
         all aggregation coefficients. Both executors consume this verbatim,
-        so their rng streams and event orders agree by construction."""
+        so their rng streams and event orders agree by construction —
+        including every fault event: drops, transit delays, stragglers,
+        deadline-retry redispatches and quorum timer flushes are all
+        decided here, so eager and jagged replays of a faulty schedule
+        stay exactly equivalent for free.
+
+        The heap carries typed events ``(t, kind, seq, payload)`` with
+        kind priority arrival < deadline < quorum, so an upload landing
+        exactly at its deadline counts as arrived and an upload landing
+        exactly at a quorum timeout joins the group before the check.
+        Fault randomness comes from a dedicated generator seeded off the
+        engine rng ONLY when ``cfg.has_faults`` — fault-free schedules
+        consume the historical stream bit-for-bit (the barrier/orchestrator
+        equivalence depends on this)."""
         cfg, prob = self.cfg, self.problem
         k_fleet, T = prob.num_learners, prob.T
         m = self.buffer_size
         nblocks = max(int(np.ceil(horizon / T)) + 1, 1)
         rows = self._block_rows(nblocks)
+        masks = self._block_masks           # (nblocks, K) bool under churn
         # without drift every block row is the tiled base row: re-solving
         # per block would just repeat the static solve
         realloc = cfg.reallocate and self.drift is not None
+        frng = (np.random.default_rng(int(self.rng.integers(2**31)))
+                if cfg.has_faults else None)
+        counters = _zero_fault_counters()
         heap: list = []
         seq = 0
         server_version = 0
         arrivals: list[_Arrival] = []
         group: list[_Arrival] = []
         flush_id = 0
+        next_did = 0                    # dispatch id
+        dstate: dict[int, str] = {}     # did -> pending | arrived | cancelled
+        open_gid = -1                   # quorum timer id of the open group
+        gid_counter = 0
 
-        def dispatch(k: int, t: float):
+        def push(t: float, kind: int, payload) -> None:
             nonlocal seq
+            heapq.heappush(heap, (t, kind, seq, payload))
+            seq += 1
+
+        def dispatch(k: int, t: float, attempt: int = 0) -> None:
+            nonlocal next_did
             block = min(int(t // T), nblocks - 1)
+            if masks is not None:
+                # an offline learner cannot accept a task: defer the
+                # dispatch to the start of its next online block (or churn
+                # it out of the run if none remains within the horizon)
+                b = block
+                while b < nblocks and not masks[b][k]:
+                    b += 1
+                if b >= nblocks or b * T > horizon:
+                    counters["offline_churned"] += 1
+                    return
+                if b != block:
+                    counters["offline_deferrals"] += 1
+                    block, t = b, b * T
             if realloc:
                 tau_a, d_a = self._alloc_for_block(block, rows)
             else:
                 tau_a, d_a = self._alloc_base()
             tau_k, d_k = int(tau_a[k]), int(d_a[k])
+            if masks is not None and d_k == 0:
+                # the masked solve starved this (online) learner — the
+                # budget fit inside the rest of the fleet; try next block
+                if (block + 1) * T <= horizon and block + 1 < nblocks:
+                    dispatch(k, (block + 1) * T, attempt)
+                else:
+                    counters["offline_churned"] += 1
+                return
             idx = part.draw_indices(d_k)
             c2, c1, c0 = (r[block, k] for r in rows)
             cost = float(c2 * tau_k * d_k + c1 * d_k + c0)
-            heapq.heappush(
-                heap, (t + cost, seq, (k, t, server_version, tau_k, d_k, idx))
+            counters["dispatches"] += 1
+            dropped = False
+            if frng is not None:
+                # fixed per-dispatch draw order: straggle -> delay -> drop
+                if (cfg.straggler_rate > 0
+                        and frng.random() < cfg.straggler_rate):
+                    counters["stragglers"] += 1
+                    cost *= cfg.straggler_factor
+                if cfg.delay_rate > 0 and frng.random() < cfg.delay_rate:
+                    counters["delays"] += 1
+                    cost += float(frng.exponential(cfg.delay_mean))
+                dropped = cfg.drop_rate > 0 and frng.random() < cfg.drop_rate
+            did = next_did
+            next_did += 1
+            dstate[did] = "pending"
+            if dropped:
+                # the upload is lost in transit: no arrival event — only a
+                # deadline (if armed) ever hears from this dispatch again
+                counters["drops"] += 1
+            else:
+                push(t + cost, _EV_ARRIVE,
+                     (did, k, t, server_version, tau_k, d_k, idx, attempt))
+            if cfg.deadline > 0:
+                push(t + cfg.deadline, _EV_DEADLINE, (did, k, attempt))
+
+        def close_group(t_flush: float, timer: bool) -> None:
+            """Flush the open buffered group (arrival-triggered at M, or a
+            quorum timer firing at ``t_flush`` after the last arrival)."""
+            nonlocal server_version, flush_id, group, open_gid
+            taus = np.array([g.tau for g in group], float)
+            ds = np.array([g.d for g in group], float)
+            phi = staleness_factor(
+                np.array([g.staleness for g in group], float),
+                kind=cfg.staleness_fn, a=cfg.staleness_a, b=cfg.staleness_b,
             )
-            seq += 1
+            # the paper's intra-buffer weighting (shared with the
+            # barrier/cycle server), version-discounted by phi;
+            # the renormalization absorbs staleness_weights' own
+            base = (fedavg_weights(ds)
+                    if cfg.aggregation == "fedavg" else
+                    staleness_weights(taus, ds, gamma=cfg.staleness_gamma))
+            w = base * phi
+            w = w / w.sum()
+            for g, wg in zip(group, w):
+                g.weight = float(wg)
+                g.flush_id = flush_id
+            closer = group[-1]
+            closer.flush = True
+            closer.timer_flush = timer
+            closer.flush_t = t_flush
+            closer.keep = 0.0
+            closer.group_weights = np.asarray(w, np.float64)
+            server_version += 1
+            closer.version_after = server_version
+            flush_id += 1
+            group = []
+            open_gid = -1
 
         for k in range(k_fleet):
             dispatch(k, 0.0)
 
         while heap and len(arrivals) < max_events:
-            t_e, _, (k, t_disp, v_disp, tau_k, d_k, idx) = heapq.heappop(heap)
+            t_e, kind, _, payload = heapq.heappop(heap)
             if t_e > horizon:
                 break
+            if kind == _EV_DEADLINE:
+                did, k, attempt = payload
+                if dstate.get(did) != "pending":
+                    continue   # arrived in time (or already cancelled)
+                dstate[did] = "cancelled"
+                counters["deadline_misses"] += 1
+                counters["retries"] += 1
+                backoff = min(cfg.retry_backoff * (2.0 ** attempt),
+                              cfg.retry_backoff_cap)
+                dispatch(k, t_e + backoff, attempt + 1)
+                continue
+            if kind == _EV_QUORUM:
+                gid, extended = payload
+                if gid != open_gid or not group:
+                    continue   # the group already flushed at M
+                if len(group) >= cfg.quorum:
+                    counters["quorum_flushes"] += 1
+                    close_group(t_e, timer=True)
+                elif not extended:
+                    # below quorum: extend the deadline once before degrading
+                    counters["quorum_extensions"] += 1
+                    push(t_e + cfg.flush_timeout, _EV_QUORUM, (gid, True))
+                else:
+                    # still below quorum after the extension: flush whatever
+                    # arrived instead of stalling the server forever
+                    counters["quorum_degradations"] += 1
+                    close_group(t_e, timer=True)
+                continue
+            did, k, t_disp, v_disp, tau_k, d_k, idx, attempt = payload
+            if dstate.get(did) == "cancelled":
+                counters["late_discards"] += 1
+                continue   # its deadline already fired and retried
+            dstate[did] = "arrived"
             a = _Arrival(
                 seq=len(arrivals), learner=k, t=t_e, tau=tau_k, d=d_k,
                 idx=idx, dispatch_t=t_disp, dispatch_version=v_disp,
@@ -384,43 +653,39 @@ class AsyncFedEngine:
             )
             group.append(a)
             arrivals.append(a)
-            if cfg.mode == "fedasync" or len(group) == m:
-                taus = np.array([g.tau for g in group], float)
-                ds = np.array([g.d for g in group], float)
+            if cfg.mode == "fedasync":
                 phi = staleness_factor(
-                    np.array([g.staleness for g in group], float),
-                    kind=cfg.staleness_fn, a=cfg.staleness_a, b=cfg.staleness_b,
+                    np.array([a.staleness], float),
+                    kind=cfg.staleness_fn, a=cfg.staleness_a,
+                    b=cfg.staleness_b,
                 )
-                if cfg.mode == "fedasync":
-                    w = np.array([cfg.alpha]) * phi
-                    keep = 1.0 - float(w[0])
-                else:
-                    # the paper's intra-buffer weighting (shared with the
-                    # barrier/cycle server), version-discounted by phi;
-                    # the renormalization absorbs staleness_weights' own
-                    base = (fedavg_weights(ds)
-                            if cfg.aggregation == "fedavg" else
-                            staleness_weights(
-                                taus, ds, gamma=cfg.staleness_gamma))
-                    w = base * phi
-                    w = w / w.sum()
-                    keep = 0.0
-                for g, wg in zip(group, w):
-                    g.weight = float(wg)
-                    g.flush_id = flush_id
+                w = np.array([cfg.alpha]) * phi
+                a.weight = float(w[0])
+                a.flush_id = flush_id
                 a.flush = True
-                a.keep = float(keep)
+                a.flush_t = t_e
+                a.keep = 1.0 - float(w[0])
                 a.group_weights = np.asarray(w, np.float64)
                 server_version += 1
+                a.version_after = server_version
                 flush_id += 1
                 group = []
-            a.version_after = server_version
+            elif len(group) == m:
+                close_group(t_e, timer=False)
+            else:
+                if cfg.quorum > 0 and len(group) == 1:
+                    gid_counter += 1
+                    open_gid = gid_counter
+                    push(t_e + cfg.flush_timeout, _EV_QUORUM,
+                         (open_gid, False))
+                a.version_after = server_version
             dispatch(k, t_e)   # immediate redispatch with the current server
 
         return _Schedule(
             arrivals=arrivals, n_flushes=flush_id,
             d_cap=max([a.d for a in arrivals], default=1),
             max_tau=max([a.tau for a in arrivals] + [1]),
+            counters=counters,
         )
 
     def suggest_num_buckets(
@@ -489,7 +754,7 @@ class AsyncFedEngine:
         ss = [g.staleness for g in group]
         return {
             "event": ev.flush_id,
-            "t": ev.t,
+            "t": ev.flush_t,
             "mode": self.cfg.mode,
             "server_version": ev.version_after,
             "learners": [g.learner for g in group],
@@ -532,6 +797,7 @@ class AsyncFedEngine:
             raise ValueError("event mode needs a virtual-time horizon")
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
+        self.fault_counters = sched.counters
         evalj, ex, ey = self._eval_pair(eval_fn, eval_batch)
 
         k_fleet = self.problem.num_learners
@@ -567,6 +833,11 @@ class AsyncFedEngine:
             pending.append(jax.tree_util.tree_map(lambda l: l[0], out))
             group.append(ev)
             if ev.flush:
+                if ev.timer_flush:
+                    # a quorum timer closed this group AFTER its last
+                    # arrival redispatched: the schedule gave that dispatch
+                    # the PRE-flush server, so hand it out before flushing
+                    dispatch_params[ev.learner] = self.params
                 models = [self.params] + pending
                 stacked = jax.tree_util.tree_map(
                     lambda *ls: jnp.stack(ls), *models
@@ -580,7 +851,10 @@ class AsyncFedEngine:
                     rec["accuracy"] = float(evalj(self.params, ex, ey))
                 history.append(rec)
                 pending, group = [], []
-            dispatch_params[ev.learner] = self.params
+                if not ev.timer_flush:
+                    dispatch_params[ev.learner] = self.params
+            else:
+                dispatch_params[ev.learner] = self.params
         return history
 
     # -- barrier (paper-scheme) rounds --------------------------------------
@@ -591,6 +865,7 @@ class AsyncFedEngine:
                 raise ValueError("barrier mode needs cycles or horizon")
             cycles = int(np.floor(horizon / prob.T + 1e-9))
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
+        self.fault_counters = _zero_fault_counters()   # barrier is fault-free
         evalj, ex, ey = self._eval_pair(eval_fn, eval_batch)
         # without drift, per-cycle re-solves would repeat the static solve
         rows = (self._block_rows(cycles)
@@ -697,7 +972,10 @@ class AsyncFedEngine:
             for a in evs:
                 k = a.learner
                 rmask[i, k] = True
-                pmask[i, k] = a.flush
+                # a timer-flush closer redispatched BEFORE the timer fired,
+                # so it takes the pre-flush server like any accumulate
+                # upload; only arrival-triggered closers see the post-flush
+                pmask[i, k] = a.flush and not a.timer_flush
                 tau_g[i, k] = a.tau
                 xs[i, k, : a.d] = train.x[a.idx]
                 ys[i, k, : a.d] = train.y[a.idx]
@@ -787,6 +1065,7 @@ class AsyncFedEngine:
             )
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
+        self.fault_counters = sched.counters
         segments = _event_segments(sched.arrivals)
         if not segments:
             return []
@@ -837,6 +1116,7 @@ class AsyncFedEngine:
             raise ValueError("num_buckets must be >= 1")
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
+        self.fault_counters = sched.counters
 
         h = num_buckets
         width = horizon / h
@@ -987,10 +1267,16 @@ def _bucketed_events(server, disp, accum, xs, ys, ms, taus, wcs, keeps, fs,
     return server, accs
 
 
-def summarize_async_history(history: list[dict]) -> dict:
+def summarize_async_history(history: list[dict], *,
+                            counters: dict | None = None) -> dict:
     """Fleet-level summary of an async run: the version-staleness profile
-    over all aggregated uploads plus aggregation counts and the virtual
-    time span. Barrier (cycle) rows carry zero version staleness by
+    (mean/max AND p50/p90/p99 quantiles) over all aggregated uploads,
+    aggregation counts, the virtual time span, and — under ``counters``
+    (pass ``engine.fault_counters``) — the fault tallies of the schedule
+    (drops, retries, deadline misses, quorum degradations, ...). The
+    ``faults`` dict always carries every ``FAULT_COUNTERS`` key so
+    consumers need no presence checks; without ``counters`` it is all
+    zeros. Barrier (cycle) rows carry zero version staleness by
     construction."""
     stal: list[int] = []
     for rec in history:
@@ -1001,4 +1287,5 @@ def summarize_async_history(history: list[dict]) -> dict:
         "virtual_time": float(history[-1]["t"]) if history else 0.0,
         "staleness": version_staleness_profile(np.asarray(stal)),
         "final_accuracy": history[-1].get("accuracy") if history else None,
+        "faults": {**_zero_fault_counters(), **(counters or {})},
     }

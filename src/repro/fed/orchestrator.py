@@ -74,6 +74,8 @@ from repro.core import (
     solve_synchronous,
     staleness_weights,
 )
+from repro.core.availability import has_availability
+from repro.core.solver_batched import apply_active_mask
 from repro.core.staleness import avg_staleness, max_staleness
 from repro.core.time_model import is_state_coupled
 from repro.data.pipeline import Dataset, FederatedPartitioner
@@ -238,23 +240,43 @@ def policy_problem_args(prob: AllocationProblem):
     )
 
 
+def require_standalone_rows(drift, *, remedy: str) -> None:
+    """THE shared guard for code paths that need standalone capacity rows
+    fixed up front: a state-coupled drift (``QueueDrift``) or an
+    availability process has no such rows — they depend on the run state
+    (past allocations, who was online) — so every consumer rejects them
+    through this one helper with one actionable message. ``remedy`` names
+    what the caller should do instead."""
+    if drift is None:
+        return
+    avail = has_availability(drift)
+    if not avail and not is_state_coupled(drift):
+        return
+    kind = "an availability process" if avail else "a state-coupled drift"
+    raise TypeError(
+        f"{type(drift).__name__} is {kind} and has no standalone "
+        f"coefficient path (its rows depend on the run state); {remedy}"
+    )
+
+
 def coefficient_rows(prob: AllocationProblem, drift: CapacityDrift | None,
                      cycles: int):
     """(C, K) f64 capacity rows per global cycle / drift block — drifted
     when a CapacityDrift is attached, else the base coefficients tiled.
     THE shared row source for the orchestrator's eager re-solves and the
     async engine's schedule (their bitwise equivalence depends on it).
-    State-coupled drifts (``QueueDrift``) have no standalone row path —
-    their rows depend on the allocations — so they are rejected here;
-    callers roll rows and allocations out together via
-    ``solve_rows_state_coupled`` / the fused scan instead."""
+    State-coupled drifts (``QueueDrift``) and availability processes have
+    no standalone row path — their rows/masks depend on the run state —
+    so they are rejected here; callers roll rows and allocations out
+    together via ``solve_rows_state_coupled`` /
+    ``solve_rows_availability`` / the fused scan instead."""
     tm = prob.time_model
-    if is_state_coupled(drift):
-        raise TypeError(
-            "state-coupled drift has no standalone coefficient path (its "
-            "rows depend on the allocations); use drift.rollout(...) or "
-            "solve_rows_state_coupled(...)"
-        )
+    require_standalone_rows(
+        drift,
+        remedy="roll rows and allocations out together via "
+        "drift.rollout(...), solve_rows_state_coupled(...) or "
+        "solve_rows_availability(...)",
+    )
     if drift is None:
         tile = lambda a: np.broadcast_to(
             a, (cycles, tm.num_learners)
@@ -264,26 +286,51 @@ def coefficient_rows(prob: AllocationProblem, drift: CapacityDrift | None,
 
 
 def solve_policy_row(scheme: str, c2r, c1r, c0r, prob: AllocationProblem,
-                     *, label: str) -> tuple[np.ndarray, np.ndarray]:
+                     *, label: str, active=None
+                     ) -> tuple[np.ndarray, np.ndarray]:
     """One fleet's (tau, d) on a single (K,) capacity row through the
     jitted traced policy, f64 under ``enable_x64`` — THE single-row solve
     shared by the orchestrator's eager per-cycle re-solve and the async
     engine's per-block allocation (the barrier-equivalence guarantee
     depends on both paths using this exact code). Raises ValueError with
-    ``label`` naming the infeasible capacity state."""
+    ``label`` naming the infeasible capacity state.
+
+    ``active`` (optional ``(K,)`` bool) masks offline learners out of the
+    solve: their slots get the ``BatchedProblems`` padded-slot semantics
+    and the sample budget is clipped into the live fleet's box
+    (``apply_active_mask``), so tau/d budget flows to online learners.
+    An all-offline row short-circuits to zeros without a policy call."""
     policy = _jitted_policy(scheme)
     T1, total1, lo1, hi1, valid1 = policy_problem_args(prob)
+    k = prob.num_learners
+    if active is not None:
+        act = np.asarray(active, bool).reshape(1, k)
+        if not act.any():
+            z = np.zeros(k, np.int64)
+            return z, z.copy()
     with enable_x64():
+        total_j, lo_j, hi_j, valid_j = (
+            jnp.asarray(total1), jnp.asarray(lo1),
+            jnp.asarray(hi1), jnp.asarray(valid1),
+        )
+        if active is not None:
+            total_j, lo_j, hi_j, valid_j = apply_active_mask(
+                total_j, lo_j, hi_j, valid_j, jnp.asarray(act)
+            )
         tau, d, ok = policy(
             jnp.asarray(c2r[None]), jnp.asarray(c1r[None]),
-            jnp.asarray(c0r[None]), jnp.asarray(T1), jnp.asarray(total1),
-            jnp.asarray(lo1), jnp.asarray(hi1), jnp.asarray(valid1),
+            jnp.asarray(c0r[None]), jnp.asarray(T1), total_j,
+            lo_j, hi_j, valid_j,
         )
         tau = np.asarray(tau[0]); d = np.asarray(d[0]); ok = bool(ok[0])
     if not ok:
+        sub = (
+            f"; {int(np.asarray(active, bool).sum())}/{k} learners online"
+            if active is not None else ""
+        )
         raise ValueError(
             "infeasible: even with tau=0 the deadline T cannot absorb "
-            f"d samples ({label})"
+            f"d samples ({label}{sub})"
         )
     return tau.astype(np.int64), d.astype(np.int64)
 
@@ -314,6 +361,49 @@ def solve_rows_state_coupled(scheme: str, drift, prob: AllocationProblem,
     if lazy:
         return drift.rollout_iter(prob.time_model, cycles, _solve)
     return drift.rollout(prob.time_model, cycles, _solve)
+
+
+def solve_rows_availability(scheme: str, drift, prob: AllocationProblem,
+                            cycles: int, *, label: str):
+    """Joint host rollout of capacity rows, allocations AND online masks
+    for an availability process: per cycle, the online mask is read from
+    the availability state, the (possibly base-drifted or
+    backlog-coupled) capacity row materialized, the *masked* allocation
+    solved through the SAME jitted traced policy as every other re-solve
+    path (``solve_policy_row(active=...)``), and the joint state advanced
+    with the solved allocation. Offline learners get tau = d = 0 and the
+    budget degrades to the live fleet's box instead of going infeasible;
+    all-offline cycles solve to all-zeros. ``label`` is a format string
+    receiving the cycle index.
+
+    Returns ``((c2s, c1s, c0s), (taus, ds), masks)`` with shapes
+    ``(C, K)`` (masks bool) — the per-cycle numerics mirror
+    ``QueueDrift.rollout_iter`` (f64 rows under ``enable_x64``)."""
+    tm = prob.time_model
+    k = tm.num_learners
+    c2s = np.empty((cycles, k)); c1s = np.empty((cycles, k))
+    c0s = np.empty((cycles, k))
+    taus = np.zeros((cycles, k), np.int64)
+    ds = np.zeros((cycles, k), np.int64)
+    masks = np.zeros((cycles, k), bool)
+    state = drift.state_init(k)
+    for c in range(cycles):
+        mask = np.asarray(drift.online_at(c, k, state))
+        with enable_x64():
+            clock, rate = drift.factors_at(c, k, state)
+            clock = np.asarray(clock, np.float64)
+            rate = np.asarray(rate, np.float64)
+        c2r = tm.c2 / clock
+        c1r = tm.c1 / rate
+        c0r = tm.c0 / rate
+        tau, d = solve_policy_row(
+            scheme, c2r, c1r, c0r, prob, label=label.format(c), active=mask,
+        )
+        state = drift.state_update(c, state, jnp.asarray(tau), jnp.asarray(d))
+        masks[c] = mask
+        c2s[c], c1s[c], c0s[c] = c2r, c1r, c0r
+        taus[c], ds[c] = tau, d
+    return (c2s, c1s, c0s), (taus, ds), masks
 
 
 def _weights_traced(tau, d, *, aggregation: str, gamma):
@@ -451,6 +541,14 @@ class Orchestrator:
         self.loss_fn = loss_fn
         self.params = init_params
         self.rng = np.random.default_rng(seed)
+        if has_availability(drift):
+            # the cycle-gated orchestrator has no offline semantics (every
+            # learner participates in every barrier round by construction)
+            raise TypeError(
+                f"{type(drift).__name__} models client availability; the "
+                "cycle-gated Orchestrator has no offline semantics — run "
+                "churn scenarios through fed.async_engine.AsyncFedEngine"
+            )
         self.drift = drift
         self.allocation = SCHEMES[mel.scheme](problem)
 
@@ -527,6 +625,14 @@ class Orchestrator:
         if self.drift is not None and not reallocate:
             import warnings
 
+            # a state-coupled drift cannot even be *simulated* statically
+            # (its rows need the dispatched allocations) — same shared
+            # rejection as coefficient_rows, not a silent base-capacity run
+            require_standalone_rows(
+                self.drift,
+                remedy="run with reallocate=True so rows and allocations "
+                "roll out together",
+            )
             warnings.warn(
                 "a CapacityDrift is attached but reallocate=False: the run "
                 "simulates the BASE capacities and the drift is ignored "
@@ -640,6 +746,11 @@ class Orchestrator:
         if self.drift is not None:
             import warnings
 
+            require_standalone_rows(
+                self.drift,
+                remedy="run with reallocate=True so rows and allocations "
+                "roll out together",
+            )
             warnings.warn(
                 "a CapacityDrift is attached but reallocate=False: the run "
                 "simulates the BASE capacities and the drift is ignored "

@@ -40,6 +40,7 @@ __all__ = [
     "drift_staleness_sweep",
     "run_async_experiment",
     "async_mode_sweep",
+    "churn_sweep",
 ]
 
 
@@ -371,6 +372,7 @@ def run_async_experiment(
     test: Dataset | None = None,
     problem=None,
     max_events: int = 100_000,
+    faults: dict | None = None,
 ) -> dict:
     """One event-driven async MEL run to virtual time ``cycles * T``.
 
@@ -385,8 +387,14 @@ def run_async_experiment(
     ``num_buckets > 0`` forces the legacy fixed grid (``run_bucketed``,
     benchmarking only). Pass ``problem`` to override the default
     MNIST-constants environment (``build_problem``) with a custom fleet.
-    ``drift`` accepts a ``CapacityDrift`` or, with ``reallocate=True``, a
-    state-coupled ``QueueDrift``.
+    ``drift`` accepts a ``CapacityDrift``, a state-coupled ``QueueDrift``
+    (``reallocate=True`` required), or an availability process
+    (``core.availability``) for client churn. ``faults`` forwards fault
+    knobs (``drop_rate``, ``straggler_rate``, ``deadline``, ``quorum``,
+    ... — see ``AsyncConfig``) into the config; event modes only (the
+    cycle barrier is the fault-free paper regime and rejects them). The
+    returned summary's ``"faults"`` dict carries the schedule's fault
+    counters.
     """
     from repro.fed.async_engine import (
         AsyncConfig, AsyncFedEngine, summarize_async_history,
@@ -403,7 +411,7 @@ def run_async_experiment(
         train, test = synthetic_mnist(max(total_samples * 2, 12_000), seed=seed)
     horizon = cycles * T
     common = dict(scheme=scheme, aggregation=aggregation, lr=lr,
-                  reallocate=reallocate)
+                  reallocate=reallocate, **(faults or {}))
     if mode == "cycle":
         cfg = AsyncConfig(mode="buffered", barrier=True, **common)
     elif mode == "buffered":
@@ -440,7 +448,7 @@ def run_async_experiment(
             train, horizon, eval_fn=mlp.accuracy, eval_batch=eval_batch,
             max_events=max_events,
         )
-    summary = summarize_async_history(history)
+    summary = summarize_async_history(history, counters=eng.fault_counters)
     return {
         "mode": mode,
         "scheme": scheme,
@@ -517,5 +525,89 @@ def async_mode_sweep(
                 "staleness_mean": s["staleness"]["mean"],
                 "staleness_max": s["staleness"]["max"],
                 "accuracy_trace": res["accuracy_trace"][:40],
+            })
+    return rows
+
+
+def churn_sweep(
+    drop_rates=(0.0, 0.2, 0.4),
+    *,
+    mode: str = "buffered",
+    cycles: int = 10,
+    seed: int = 0,
+    policies=("adaptive", "static", "equal"),
+    problem=None,
+    train: Dataset | None = None,
+    test: Dataset | None = None,
+) -> list[dict]:
+    """Adaptive KKT reallocation vs frozen/equal allocation as the fleet
+    churns: one event-driven run per (dropout rate, policy) cell under a
+    compound fault schedule, at equal virtual time.
+
+    Each ``rate`` drives BOTH the client-availability Markov chain
+    (``MarkovAvailability(p_drop=rate)`` — learners go offline between
+    blocks) and upload loss (``drop_rate = rate / 2``), on top of a fixed
+    straggler/delay/deadline-retry background and, in buffered mode, a
+    quorum of 2 with graceful degradation — the regime the paper's
+    allocator is supposed to absorb. Policies: ``"adaptive"`` re-solves
+    the masked KKT allocation per drift block, ``"static"`` freezes the
+    base KKT solve (dispatched whenever a learner is online), and
+    ``"equal"`` re-solves the equal-task baseline (``eta``) per block.
+
+    Every cell runs the exact event-indexed scan path (``run_events``)
+    and reports accuracy, staleness quantiles and the schedule's fault
+    counters; no cell may stall or raise, so a degraded fleet must still
+    produce a history. The churn twin of ``async_mode_sweep``; feeds
+    ``benchmarks/churn_bench.py``.
+    """
+    from repro.core.availability import MarkovAvailability
+
+    prob = problem or build_spread_problem(k=4, total_samples=80)
+    k, T = prob.num_learners, prob.T
+    if train is None or test is None:
+        train, test = synthetic_mnist(6000, seed=seed)
+    policy_kw = {
+        "adaptive": dict(scheme="kkt_sai", reallocate=True),
+        "static": dict(scheme="kkt_sai", reallocate=False),
+        "equal": dict(scheme="eta", reallocate=True),
+    }
+    rows: list[dict] = []
+    for rate in drop_rates:
+        availability = MarkovAvailability(
+            p_drop=float(rate), p_join=0.5, seed=seed,
+        )
+        faults = dict(
+            drop_rate=float(rate) / 2,
+            straggler_rate=0.2, straggler_factor=3.0,
+            delay_rate=0.2, delay_mean=0.5 * T,
+            deadline=2.5 * T, retry_backoff=0.25 * T, retry_backoff_cap=T,
+        )
+        if mode == "buffered":
+            faults.update(quorum=2, flush_timeout=1.5 * T)
+        for policy in policies:
+            res = run_async_experiment(
+                mode=mode, cycles=cycles, seed=seed, problem=prob,
+                train=train, test=test, drift=availability,
+                buffer_size=min(3, k), bucketed=True, faults=faults,
+                **policy_kw[policy],
+            )
+            s = res["summary"]
+            rows.append({
+                "K": k,
+                "T": T,
+                "mode": mode,
+                "cycles": cycles,
+                "drop_rate": float(rate),
+                "policy": policy,
+                "final_accuracy": res["final_accuracy"],
+                "aggregations": s["aggregations"],
+                "uploads": s["uploads"],
+                "virtual_time": s["virtual_time"],
+                "staleness_mean": s["staleness"]["mean"],
+                "staleness_p50": s["staleness"]["p50"],
+                "staleness_p90": s["staleness"]["p90"],
+                "staleness_p99": s["staleness"]["p99"],
+                "staleness_max": s["staleness"]["max"],
+                "faults": s["faults"],
             })
     return rows

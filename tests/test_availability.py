@@ -1,0 +1,263 @@
+"""Availability (client churn) processes: the drift-protocol surface of
+``core.availability``, mask dynamics and determinism, composition with
+base capacity drifts, masked allocation solves, and the rejection
+surface of every consumer that needs standalone capacity rows."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ActiveRateAvailability,
+    AllocationProblem,
+    CapacityDrift,
+    MarkovAvailability,
+    QueueDrift,
+    TimeModel,
+    TraceAvailability,
+    apply_active_mask,
+    availability_masks,
+    capacity_state_coupled,
+    has_availability,
+)
+from repro.core.time_model import is_state_coupled
+from repro.fed.orchestrator import (
+    MELConfig,
+    Orchestrator,
+    coefficient_rows,
+    solve_policy_row,
+    solve_rows_availability,
+)
+from repro.models import mlp
+
+
+def _prob(k: int = 3) -> AllocationProblem:
+    tm = TimeModel(c2=np.full(k, 0.04), c1=np.full(k, 0.004),
+                   c0=np.full(k, 0.4))
+    return AllocationProblem(time_model=tm, T=6.0, total_samples=60,
+                             d_lower=10, d_upper=40)
+
+
+# ---------------------------------------------------------------------------
+# protocol probes
+# ---------------------------------------------------------------------------
+
+def test_protocol_probes():
+    """Availability processes satisfy the drift protocol AND expose
+    ``online_at``; plain capacity drifts do not."""
+    for drift in (MarkovAvailability(), ActiveRateAvailability(),
+                  TraceAvailability(np.ones((2, 3), bool))):
+        assert has_availability(drift)
+        assert is_state_coupled(drift)  # carries state_init/state_update
+    assert not has_availability(None)
+    assert not has_availability(CapacityDrift())
+    assert not has_availability(QueueDrift())
+
+
+def test_capacity_state_coupled_looks_through_to_base():
+    """Churn alone does NOT couple capacities to allocations — a frozen
+    schedule stays well defined — but a queue-backlogged base does."""
+    assert not capacity_state_coupled(MarkovAvailability())
+    assert not capacity_state_coupled(MarkovAvailability(base=CapacityDrift()))
+    assert capacity_state_coupled(MarkovAvailability(base=QueueDrift()))
+    assert capacity_state_coupled(QueueDrift())
+    assert not capacity_state_coupled(CapacityDrift())
+    assert not capacity_state_coupled(None)
+
+
+def test_parameter_validation():
+    with pytest.raises(ValueError, match="p_drop"):
+        MarkovAvailability(p_drop=1.5)
+    with pytest.raises(ValueError, match="p_join"):
+        MarkovAvailability(p_join=-0.1)
+    with pytest.raises(ValueError, match="median"):
+        ActiveRateAvailability(median=0.0)
+    with pytest.raises(ValueError, match="sigma"):
+        ActiveRateAvailability(sigma=-1.0)
+    with pytest.raises(ValueError, match="trace"):
+        TraceAvailability(np.ones((4,), bool))
+
+
+# ---------------------------------------------------------------------------
+# mask dynamics
+# ---------------------------------------------------------------------------
+
+def test_markov_masks_start_online_and_are_deterministic():
+    av = MarkovAvailability(p_drop=0.4, p_join=0.5, seed=0)
+    m1 = availability_masks(av, 4, 8)
+    m2 = availability_masks(av, 4, 8)
+    assert m1.shape == (8, 4) and m1.dtype == bool
+    assert m1[0].all()                       # everyone online at block 0
+    np.testing.assert_array_equal(m1, m2)    # seeded → reproducible
+    m3 = availability_masks(MarkovAvailability(p_drop=0.4, seed=1), 4, 8)
+    assert not np.array_equal(m1, m3)        # seed actually matters
+
+
+def test_markov_degenerate_chains():
+    always = availability_masks(MarkovAvailability(p_drop=0.0, p_join=1.0), 3, 6)
+    assert always.all()
+    gone = availability_masks(MarkovAvailability(p_drop=1.0, p_join=0.0), 3, 6)
+    assert gone[0].all() and not gone[1:].any()
+
+
+def test_active_rate_rates_and_masks():
+    av = ActiveRateAvailability(median=0.7, sigma=0.6, floor=0.1, seed=3)
+    r = np.asarray(av.rates(16))
+    assert r.shape == (16,)
+    assert (r >= 0.1 - 1e-7).all() and (r <= 1.0 + 1e-7).all()
+    np.testing.assert_array_equal(r, np.asarray(av.rates(16)))
+    m = availability_masks(av, 16, 6)
+    np.testing.assert_array_equal(m, availability_masks(av, 16, 6))
+    # a rate floor of 1 pins every learner online every block
+    sat = ActiveRateAvailability(median=1.0, sigma=0.0, floor=1.0)
+    assert availability_masks(sat, 5, 4).all()
+
+
+def test_trace_wraps_periodically_and_validates_fleet_size():
+    tr = np.array([[True, True], [True, False], [False, True]])
+    av = TraceAvailability(tr)
+    m = availability_masks(av, 2, 7)
+    for c in range(7):
+        np.testing.assert_array_equal(m[c], tr[c % 3])
+    with pytest.raises(ValueError, match="fleet has 5"):
+        av.state_init(5)
+
+
+def test_composition_with_base_drift():
+    """``factors_at`` delegates to the wrapped base so churn composes
+    with time-varying capacity; without a base, factors are ones."""
+    base = CapacityDrift(clock_jitter=0.2, fading_sigma_db=2.0, seed=7)
+    av = MarkovAvailability(p_drop=0.3, seed=0, base=base)
+    state = av.state_init(4)
+    for c in range(3):
+        cf, rf = av.factors_at(c, 4, state)
+        bcf, brf = base.factors_at(c, 4)
+        np.testing.assert_array_equal(np.asarray(cf), np.asarray(bcf))
+        np.testing.assert_array_equal(np.asarray(rf), np.asarray(brf))
+        state = av.state_update(c, state, jnp.zeros(4, jnp.int32),
+                                jnp.zeros(4, jnp.int32))
+    bare = MarkovAvailability(p_drop=0.3, seed=0)
+    cf, rf = bare.factors_at(0, 4, bare.state_init(4))
+    np.testing.assert_array_equal(np.asarray(cf), np.ones(4, np.float32))
+    np.testing.assert_array_equal(np.asarray(rf), np.ones(4, np.float32))
+    # same seed → the availability component is identical with/without base
+    np.testing.assert_array_equal(
+        availability_masks(av, 4, 6), availability_masks(bare, 4, 6)
+    )
+
+
+def test_queue_coupled_base_state_advances_with_allocation():
+    """With a queue-backlogged base the joint state carries BOTH pytree
+    leaves and the base leaf responds to the dispatched load."""
+    av = MarkovAvailability(p_drop=0.0, p_join=1.0,
+                            base=QueueDrift(congestion=1.0, gain=2.0))
+    state = av.state_init(3)
+    avail0, q0 = state
+    assert np.asarray(q0).shape == (3,)
+    heavy = av.state_update(0, state, jnp.asarray([5, 5, 5]),
+                            jnp.asarray([40, 10, 10]))
+    _, q1 = heavy
+    assert not np.array_equal(np.asarray(q1), np.asarray(q0))
+
+
+# ---------------------------------------------------------------------------
+# masked allocation solves
+# ---------------------------------------------------------------------------
+
+def test_apply_active_mask_padded_slot_semantics():
+    total = jnp.asarray([100.0])
+    lo = jnp.asarray([[10.0, 10.0, 10.0]])
+    hi = jnp.asarray([[40.0, 40.0, 40.0]])
+    valid = jnp.asarray([[True, True, True]])
+    act = jnp.asarray([[True, False, True]])
+    tot, lo2, hi2, v2 = apply_active_mask(total, lo, hi, valid, act)
+    np.testing.assert_array_equal(np.asarray(lo2), [[10.0, 0.0, 10.0]])
+    np.testing.assert_array_equal(np.asarray(hi2), [[40.0, 0.0, 40.0]])
+    np.testing.assert_array_equal(np.asarray(v2), [[True, False, True]])
+    # budget clipped into the live fleet's box: 100 > 2 * 40
+    np.testing.assert_array_equal(np.asarray(tot), [80.0])
+    # and up to the live lower bound when the fleet thins drastically
+    tot2, *_ = apply_active_mask(jnp.asarray([5.0]), lo, hi, valid, act)
+    np.testing.assert_array_equal(np.asarray(tot2), [20.0])
+
+
+def test_masked_solve_redistributes_budget():
+    prob = _prob()
+    c2s, c1s, c0s = coefficient_rows(prob, None, 1)
+    tau_f, d_f = solve_policy_row("kkt_sai", c2s[0], c1s[0], c0s[0], prob,
+                                  label="full")
+    tau_m, d_m = solve_policy_row("kkt_sai", c2s[0], c1s[0], c0s[0], prob,
+                                  label="masked",
+                                  active=np.array([True, False, True]))
+    assert d_m[1] == 0 and tau_m[1] == 0
+    assert d_m.sum() == np.clip(d_f.sum(), 2 * prob.d_lower, 2 * prob.d_upper)
+    assert (d_m[[0, 2]] >= prob.d_lower).all()
+
+
+def test_masked_solve_all_offline_is_zero_budget():
+    prob = _prob()
+    c2s, c1s, c0s = coefficient_rows(prob, None, 1)
+    tau, d = solve_policy_row("kkt_sai", c2s[0], c1s[0], c0s[0], prob,
+                              label="dark", active=np.zeros(3, bool))
+    assert tau.sum() == 0 and d.sum() == 0
+    assert tau.dtype == np.int64 and d.dtype == np.int64
+
+
+def test_masked_solve_infeasible_names_online_count():
+    """An infeasible *masked* fleet reports how many learners were live."""
+    k = 3
+    tm = TimeModel(c2=np.full(k, 50.0), c1=np.full(k, 5.0),
+                   c0=np.full(k, 0.4))
+    prob = AllocationProblem(time_model=tm, T=1.0, total_samples=60,
+                             d_lower=20, d_upper=40)
+    c2s, c1s, c0s = coefficient_rows(prob, None, 1)
+    with pytest.raises(ValueError, match="2/3 learners online"):
+        solve_policy_row("kkt_sai", c2s[0], c1s[0], c0s[0], prob,
+                         label="tight", active=np.array([True, False, True]))
+
+
+def test_solve_rows_availability_joint_rollout():
+    prob = _prob()
+    av = MarkovAvailability(p_drop=0.5, p_join=0.3, seed=2)
+    (c2s, c1s, c0s), (taus, ds), masks = solve_rows_availability(
+        "kkt_sai", av, prob, 6, label="cycle {}"
+    )
+    assert c2s.shape == taus.shape == ds.shape == masks.shape == (6, 3)
+    # a Markov process without a queue base ignores tau/d, so the joint
+    # rollout's masks equal the frozen-allocation rollout's
+    np.testing.assert_array_equal(masks, availability_masks(av, 3, 6))
+    # offline slots get nothing; live slots honor the (clipped) budget
+    assert (ds[~masks] == 0).all() and (taus[~masks] == 0).all()
+    for c in range(6):
+        n_on = int(masks[c].sum())
+        if n_on:
+            assert ds[c].sum() >= n_on * prob.d_lower
+        else:
+            assert ds[c].sum() == 0
+    assert not masks.all()  # p_drop=0.5 actually churned someone
+
+
+# ---------------------------------------------------------------------------
+# rejection surface
+# ---------------------------------------------------------------------------
+
+def test_coefficient_rows_rejects_availability():
+    with pytest.raises(TypeError, match="an availability process"):
+        coefficient_rows(_prob(), MarkovAvailability(), 4)
+    with pytest.raises(TypeError, match="solve_rows_availability"):
+        coefficient_rows(_prob(), TraceAvailability(np.ones((1, 3), bool)), 4)
+
+
+def test_coefficient_rows_still_rejects_state_coupled():
+    with pytest.raises(TypeError, match="a state-coupled drift"):
+        coefficient_rows(_prob(), QueueDrift(), 4)
+
+
+def test_orchestrator_rejects_availability():
+    prob = _prob()
+    params = mlp.init(jax.random.key(0))
+    with pytest.raises(TypeError, match="no offline semantics"):
+        Orchestrator(MELConfig(T=6.0, total_samples=60), prob, mlp.loss,
+                     params, drift=MarkovAvailability())

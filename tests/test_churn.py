@@ -1,0 +1,388 @@
+"""Churn robustness: fault injection (drops / delays / stragglers),
+deadline-retry redispatch, quorum-degraded buffered flushes, and
+availability-gated dispatch — all through the schedule/execute split, so
+the event-indexed (jagged) scan must replay the eager loop EXACTLY under
+every fault schedule. Pins:
+
+  * ``AsyncConfig`` fault-knob validation and the engine's churn guards;
+  * termination and counter bookkeeping of the faulty scheduler
+    (all-drop fleets, deadline retries, quorum timers);
+  * the ``_event_segments`` invariants under dropped/retried arrivals;
+  * eager-vs-jagged bitwise equivalence with the full fault cocktail on
+    (property-tested over drop rate x mode x staleness_fn);
+  * fault counters surfacing through ``summarize_async_history`` and
+    ``fed.simulation.run_async_experiment``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (
+    AllocationProblem,
+    MarkovAvailability,
+    QueueDrift,
+    TimeModel,
+    TraceAvailability,
+)
+from repro.data.pipeline import FederatedPartitioner, synthetic_mnist
+from repro.fed.async_engine import (
+    FAULT_COUNTERS,
+    AsyncConfig,
+    AsyncFedEngine,
+    _event_segments,
+    summarize_async_history,
+)
+from repro.fed.simulation import run_async_experiment
+from repro.models import mlp
+
+from tests._prop import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def data():
+    return synthetic_mnist(1200, n_test=50, seed=0)
+
+
+def _prob(k: int = 3) -> AllocationProblem:
+    tm = TimeModel(c2=np.full(k, 0.04), c1=np.full(k, 0.004),
+                   c0=np.full(k, 0.4))
+    return AllocationProblem(time_model=tm, T=6.0, total_samples=60,
+                             d_lower=10, d_upper=40)
+
+
+def _cocktail(**kw) -> AsyncConfig:
+    base = dict(mode="buffered", buffer_size=3, alpha=0.6,
+                drop_rate=0.25, delay_rate=0.3, delay_mean=2.0,
+                straggler_rate=0.25, straggler_factor=3.0,
+                deadline=15.0, retry_backoff=1.5, retry_backoff_cap=6.0,
+                quorum=2, flush_timeout=9.0)
+    base.update(kw)
+    return AsyncConfig(**base)
+
+
+def _run_both(cfg, prob, train, horizon, *, seed=2, drift=None):
+    params = mlp.init(jax.random.key(1))
+    e1 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed, drift=drift)
+    h1 = e1.run(train, horizon)
+    e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed, drift=drift)
+    h2 = e2.run_events(train, horizon)
+    return e1, h1, e2, h2
+
+
+def _assert_history_match(h1, h2):
+    assert len(h1) == len(h2)
+    for r1, r2 in zip(h1, h2):
+        assert r1["learners"] == r2["learners"]
+        assert r1["staleness_list"] == r2["staleness_list"]
+        assert r1["server_version"] == r2["server_version"]
+        assert r1["t"] == r2["t"]
+        np.testing.assert_array_equal(r1["weights"], r2["weights"])
+        np.testing.assert_array_equal(r1["tau"], r2["tau"])
+        np.testing.assert_array_equal(r1["d"], r2["d"])
+        assert r1["keep"] == r2["keep"]
+
+
+def _assert_params_close(e1, e2, atol=1e-5):
+    for a, b in zip(jax.tree_util.tree_leaves(e1.params),
+                    jax.tree_util.tree_leaves(e2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# config validation + engine guards
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(drop_rate=1.5), "drop_rate"),
+    (dict(straggler_rate=-0.1), "straggler_rate"),
+    (dict(straggler_rate=0.5, straggler_factor=0.5), "straggler_factor"),
+    (dict(delay_rate=0.5, delay_mean=0.0), "delay_mean"),
+    (dict(deadline=-1.0), "deadline must be"),
+    (dict(deadline=5.0, retry_backoff=0.0), "retry_backoff > 0"),
+    (dict(deadline=5.0, retry_backoff=2.0, retry_backoff_cap=1.0),
+     "retry_backoff_cap"),
+    (dict(quorum=-1), "quorum must be"),
+    (dict(mode="fedasync", quorum=2, flush_timeout=3.0), "buffered"),
+    (dict(mode="buffered", quorum=2), "flush_timeout > 0"),
+    (dict(mode="buffered", flush_timeout=3.0), "flush_timeout without"),
+    (dict(mode="buffered", barrier=True, drop_rate=0.1),
+     "fault-free paper regime"),
+    (dict(mode="buffered", barrier=True, deadline=5.0),
+     "fault-free paper regime"),
+])
+def test_config_rejects_bad_fault_knobs(kw, match):
+    with pytest.raises(ValueError, match=match):
+        AsyncConfig(**kw)
+
+
+def test_has_faults_flag():
+    assert not AsyncConfig().has_faults
+    assert not AsyncConfig(mode="buffered", barrier=True).has_faults
+    assert AsyncConfig(drop_rate=0.1).has_faults
+    assert AsyncConfig(delay_rate=0.1).has_faults
+    assert AsyncConfig(straggler_rate=0.1).has_faults
+    assert AsyncConfig(deadline=5.0).has_faults
+    assert AsyncConfig(mode="buffered", quorum=1, flush_timeout=2.0).has_faults
+
+
+def test_engine_guards(data):
+    train, _ = data
+    prob = _prob()
+    params = mlp.init(jax.random.key(0))
+    with pytest.raises(ValueError, match="quorum .* buffer_size"):
+        AsyncFedEngine(
+            AsyncConfig(mode="buffered", buffer_size=2, quorum=3,
+                        flush_timeout=5.0),
+            prob, mlp.loss, params,
+        )
+    with pytest.raises(ValueError, match="no barrier regime"):
+        AsyncFedEngine(
+            AsyncConfig(mode="buffered", barrier=True),
+            prob, mlp.loss, params, drift=MarkovAvailability(),
+        )
+    # churn over a queue-coupled base inherits the reallocate requirement
+    with pytest.raises(ValueError, match="reallocate=True"):
+        AsyncFedEngine(
+            AsyncConfig(mode="fedasync"), prob, mlp.loss, params,
+            drift=MarkovAvailability(base=QueueDrift()),
+        )
+    # ... but churn over a plain/exogenous base does NOT (frozen schedule)
+    AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss, params,
+                   drift=MarkovAvailability())
+
+
+# ---------------------------------------------------------------------------
+# scheduler: termination + counters
+# ---------------------------------------------------------------------------
+
+def test_all_drop_no_deadline_terminates_empty(data):
+    """Every upload lost and no deadline: the run ends (no events left)
+    with an empty history instead of spinning."""
+    train, _ = data
+    prob = _prob()
+    eng = AsyncFedEngine(AsyncConfig(mode="fedasync", drop_rate=1.0),
+                         prob, mlp.loss, mlp.init(jax.random.key(0)), seed=2)
+    hist = eng.run(train, 30.0)
+    assert hist == []
+    c = eng.fault_counters
+    assert set(c) == set(FAULT_COUNTERS)
+    assert c["dispatches"] == c["drops"] == prob.num_learners
+    assert c["retries"] == 0
+
+
+def test_all_drop_with_deadline_keeps_retrying(data):
+    """Deadlines turn a silent drop into a miss + capped-backoff retry:
+    the fleet keeps redispatching until the horizon, never stalling."""
+    train, _ = data
+    prob = _prob()
+    eng = AsyncFedEngine(
+        AsyncConfig(mode="fedasync", drop_rate=1.0, deadline=8.0,
+                    retry_backoff=1.0, retry_backoff_cap=4.0),
+        prob, mlp.loss, mlp.init(jax.random.key(0)), seed=2,
+    )
+    hist = eng.run(train, 40.0)
+    assert hist == []                       # nothing ever arrives ...
+    c = eng.fault_counters
+    assert c["deadline_misses"] == c["retries"] > 0   # ... but we retried
+    assert c["dispatches"] == prob.num_learners + c["retries"]
+    assert c["drops"] == c["dispatches"]
+
+
+def test_straggler_deadline_late_discard(data):
+    """A guaranteed straggler blows every deadline: the in-flight task is
+    cancelled, its late upload discarded, and the retry (still straggling)
+    repeats — versions only ever advance via fresh dispatches."""
+    train, _ = data
+    prob = _prob()
+    eng = AsyncFedEngine(
+        AsyncConfig(mode="fedasync", straggler_rate=1.0,
+                    straggler_factor=50.0, deadline=6.0, retry_backoff=1.0),
+        prob, mlp.loss, mlp.init(jax.random.key(0)), seed=2,
+    )
+    hist = eng.run(train, 30.0)
+    c = eng.fault_counters
+    assert c["stragglers"] == c["dispatches"] > prob.num_learners
+    assert c["deadline_misses"] > 0
+    assert hist == [] or c["late_discards"] > 0
+
+
+def test_fault_free_counters_are_zero(data):
+    train, _ = data
+    prob = _prob()
+    eng = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
+                         mlp.init(jax.random.key(0)), seed=2)
+    hist = eng.run(train, 12.0)
+    assert len(hist) > 0
+    c = eng.fault_counters
+    assert c["dispatches"] > 0
+    assert all(c[k] == 0 for k in FAULT_COUNTERS if k != "dispatches")
+
+
+def test_quorum_timer_flushes_partial_buffers(data):
+    """With churned uploads a full M-buffer never forms; the quorum timer
+    flushes partial groups (extending once below quorum) so the server
+    keeps aggregating."""
+    train, _ = data
+    prob = _prob()
+    eng = AsyncFedEngine(
+        AsyncConfig(mode="buffered", buffer_size=3, drop_rate=0.4,
+                    quorum=2, flush_timeout=5.0),
+        prob, mlp.loss, mlp.init(jax.random.key(0)), seed=3,
+    )
+    hist = eng.run(train, 60.0)
+    c = eng.fault_counters
+    assert c["drops"] > 0
+    timer_closes = (c["quorum_flushes"] + c["quorum_degradations"])
+    assert timer_closes > 0                # progress despite lost uploads
+    assert len(hist) >= timer_closes
+    versions = [r["server_version"] for r in hist]
+    assert versions == sorted(versions)    # flushes bump monotonically
+
+
+def test_availability_gates_dispatch(data):
+    """An offline learner is never dispatched: every aggregated upload
+    comes from a learner that was online in its dispatch block, and
+    deferrals are counted."""
+    train, _ = data
+    prob = _prob()
+    trace = np.array([[True, True, False],
+                      [True, False, False],
+                      [True, True, True]])
+    drift = TraceAvailability(trace)
+    eng = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
+                         mlp.init(jax.random.key(0)), seed=2, drift=drift)
+    part = FederatedPartitioner(train, seed=int(eng.rng.integers(2**31)))
+    sched = eng._build_schedule(part, 30.0, 100_000)
+    assert len(sched.arrivals) > 0
+    T = prob.T
+    for a in sched.arrivals:
+        block = int(a.dispatch_t // T)
+        assert trace[block % 3, a.learner]      # dispatched while online
+    assert sched.counters["offline_deferrals"] > 0
+
+
+# ---------------------------------------------------------------------------
+# jagged replay under faults
+# ---------------------------------------------------------------------------
+
+def test_event_segments_invariants_under_faults(data):
+    """Dropped arrivals never enter the schedule; cancelled-then-late
+    arrivals are discarded; the surviving flush-ordered sequence still
+    satisfies every jagged-segment invariant."""
+    train, _ = data
+    prob = _prob()
+    for cfg in (_cocktail(), _cocktail(mode="fedasync", buffer_size=0,
+                                       quorum=0, flush_timeout=0.0)):
+        eng = AsyncFedEngine(cfg, prob, mlp.loss,
+                             mlp.init(jax.random.key(0)), seed=4)
+        part = FederatedPartitioner(train, seed=0)
+        sched = eng._build_schedule(part, 36.0, 100_000)
+        c = sched.counters
+        assert c["drops"] > 0 or c["deadline_misses"] > 0
+        segs = _event_segments(sched.arrivals)
+        flushed = [a for a in sched.arrivals if a.flush_id >= 0]
+        assert sum(len(s) for s in segs) == len(flushed)
+        for evs in segs:
+            learners = [a.learner for a in evs]
+            assert len(set(learners)) == len(learners)   # one slot each
+            flush_pos = [i for i, a in enumerate(evs) if a.flush]
+            assert len(flush_pos) <= 1
+            if flush_pos:
+                assert flush_pos[0] == len(evs) - 1      # flush is last
+            if cfg.mode == "fedasync":
+                assert len(evs) == 1 and evs[0].flush
+        # rebuilding from a same-seed engine replays the fault stream
+        eng2 = AsyncFedEngine(cfg, prob, mlp.loss,
+                              mlp.init(jax.random.key(0)), seed=4)
+        part2 = FederatedPartitioner(train, seed=0)
+        sched2 = eng2._build_schedule(part2, 36.0, 100_000)
+        assert sched2.counters == c
+        assert [(a.learner, a.t, a.flush, a.flush_id)
+                for a in sched2.arrivals] == \
+               [(a.learner, a.t, a.flush, a.flush_id)
+                for a in sched.arrivals]
+
+
+def test_cocktail_eager_jagged_equivalence(data):
+    """The full fault cocktail (drops + delays + stragglers + deadlines +
+    quorum timers): the jagged scan replays the eager loop bitwise."""
+    train, _ = data
+    e1, h1, e2, h2 = _run_both(_cocktail(), _prob(), train, 36.0, seed=2)
+    assert len(h1) > 0
+    _assert_history_match(h1, h2)
+    _assert_params_close(e1, e2)
+    assert e1.fault_counters == e2.fault_counters
+    assert e1.fault_counters["dispatches"] > 0
+
+
+def test_availability_realloc_eager_jagged_equivalence(data):
+    """Churn + adaptive per-block re-solves: both executors consume the
+    same masked-solve schedule."""
+    train, _ = data
+    drift = MarkovAvailability(p_drop=0.4, p_join=0.5, seed=0)
+    cfg = AsyncConfig(mode="buffered", buffer_size=2, reallocate=True)
+    e1, h1, e2, h2 = _run_both(cfg, _prob(), train, 36.0, seed=2,
+                               drift=drift)
+    assert len(h1) > 0
+    _assert_history_match(h1, h2)
+    _assert_params_close(e1, e2)
+    assert e1.fault_counters == e2.fault_counters
+
+
+@settings(max_examples=4, deadline=None)
+@given(drop=st.floats(0.0, 0.5),
+       mode=st.sampled_from(["fedasync", "buffered"]),
+       fn=st.sampled_from(["constant", "hinge", "poly"]),
+       seed=st.integers(0, 2**16))
+def test_faulty_replay_property(drop, mode, fn, seed):
+    """Property: across drop rates, server modes, staleness discounts and
+    engine seeds (which drive the fault rng), the jagged scan's replay of
+    the faulty schedule stays exact and the two executors agree on every
+    fault counter."""
+    train, _ = synthetic_mnist(1200, n_test=50, seed=1)
+    kw = dict(drop_rate=drop, straggler_rate=0.3, straggler_factor=2.5,
+              delay_rate=0.3, delay_mean=1.5, deadline=14.0,
+              retry_backoff=1.0, staleness_fn=fn)
+    cfg = (AsyncConfig(mode="buffered", buffer_size=2, **kw)
+           if mode == "buffered" else AsyncConfig(mode="fedasync", **kw))
+    e1, h1, e2, h2 = _run_both(cfg, _prob(), train, 24.0, seed=seed)
+    _assert_history_match(h1, h2)
+    _assert_params_close(e1, e2)
+    assert e1.fault_counters == e2.fault_counters
+
+
+# ---------------------------------------------------------------------------
+# summaries + simulation surface
+# ---------------------------------------------------------------------------
+
+def test_summary_carries_faults_and_quantiles(data):
+    train, _ = data
+    eng = AsyncFedEngine(_cocktail(), _prob(), mlp.loss,
+                         mlp.init(jax.random.key(0)), seed=2)
+    hist = eng.run(train, 36.0)
+    s = summarize_async_history(hist, counters=eng.fault_counters)
+    assert s["faults"] == eng.fault_counters
+    assert {"p50", "p90", "p99"} <= s["staleness"].keys()
+    # counters default to all-zero when none are supplied
+    s0 = summarize_async_history(hist)
+    assert set(s0["faults"]) == set(FAULT_COUNTERS)
+    assert all(v == 0 for v in s0["faults"].values())
+
+
+def test_run_async_experiment_forwards_faults(data):
+    train, test = data
+    out = run_async_experiment(
+        mode="buffered", cycles=4, problem=_prob(), train=train, test=test,
+        bucketed=True, faults=dict(drop_rate=0.3, deadline=14.0,
+                                   retry_backoff=1.0),
+        drift=MarkovAvailability(p_drop=0.3, p_join=0.5, seed=0),
+    )
+    f = out["summary"]["faults"]
+    assert f["dispatches"] > 0
+    assert f["drops"] + f["retries"] + f["offline_deferrals"] > 0
+    with pytest.raises(ValueError, match="fault-free paper regime"):
+        run_async_experiment(mode="cycle", cycles=2, problem=_prob(),
+                             train=train, test=test,
+                             faults=dict(drop_rate=0.3))

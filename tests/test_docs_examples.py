@@ -38,7 +38,8 @@ def python_blocks(path: pathlib.Path) -> "list[tuple[int, str]]":
 def test_docs_exist():
     """The docs suite this gate guards must actually be present."""
     names = {p.name for p in (ROOT / "docs").glob("*.md")}
-    assert {"architecture.md", "allocation.md", "async_engine.md"} <= names
+    assert {"architecture.md", "allocation.md", "async_engine.md",
+            "robustness.md"} <= names
 
 
 @pytest.mark.parametrize(
