@@ -13,11 +13,14 @@ sections into the same file.
 
 from __future__ import annotations
 
+import datetime
 import json
 import pathlib
 import time
 
 import numpy as np
+
+import jax
 
 from repro.core import (
     AllocationProblem,
@@ -33,13 +36,40 @@ from repro.core import (
 OUT_PATH = pathlib.Path("BENCH_alloc.json")
 
 
+def _wrap_section(payload, device, written_at) -> dict:
+    return {"device": device, "written_at": written_at, "data": payload}
+
+
 def _merge_out(section: str, payload) -> None:
-    data = {"bench": "alloc", "device": "cpu"}
+    """Merge ``payload`` into ``BENCH_alloc.json`` under ``section``.
+
+    Each section records the backend that ACTUALLY produced it
+    (``jax.default_backend()``) and a UTC timestamp — a single top-level
+    ``"device": "cpu"`` would misattribute sections merged in from a GPU/TPU
+    run of one bench into a file seeded on CPU. Legacy files with the old
+    top-level device key are migrated in place on first merge (their
+    sections inherit that device, with a null timestamp)."""
+    data: dict = {"bench": "alloc"}
     if OUT_PATH.exists():
-        data.update(json.loads(OUT_PATH.read_text()))
-    data[section] = payload
+        old = json.loads(OUT_PATH.read_text())
+        legacy_device = old.pop("device", None)
+        data.update(old)
+        if legacy_device is not None:
+            for name, sec in data.items():
+                if name == "bench":
+                    continue
+                if not (isinstance(sec, dict) and "data" in sec
+                        and "device" in sec):
+                    data[name] = _wrap_section(sec, legacy_device, None)
+    data[section] = _wrap_section(
+        payload,
+        jax.default_backend(),
+        datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+    )
     OUT_PATH.write_text(json.dumps(data, indent=2) + "\n")
-    print(f"# wrote {OUT_PATH} [{section}]")
+    print(f"# wrote {OUT_PATH} [{section}] ({data[section]['device']})")
 
 
 def _make_problem(k: int, seed: int, total: int = 6000) -> AllocationProblem:

@@ -15,6 +15,9 @@ Sections:
   churn     adaptive KKT vs static/equal allocation under client churn +
             fault injection at rising dropout rates (merges into
             BENCH_alloc.json)
+  fleet     fleet-of-fleets scale: FleetEngine rounds at 10^4 learners +
+            the sharded dispatch solve at 10^6 learners (merges into
+            BENCH_alloc.json)
   kernels   hot-spot micro-benchmarks
   roofline  per (arch x shape x mesh) roofline terms from dry-run artifacts
 """
@@ -30,6 +33,7 @@ from benchmarks import (
     alloc_bench,
     async_bench,
     churn_bench,
+    fleet_scale,
     kernel_bench,
     roofline_report,
     solver_table,
@@ -43,6 +47,7 @@ SECTIONS = [
     ("realloc_bench", alloc_bench.realloc_main),
     ("async_bench", async_bench.main),
     ("churn_bench", churn_bench.main),
+    ("fleet_scale", fleet_scale.main),
     ("kernel_bench", kernel_bench.main),
     ("roofline_report", roofline_report.main),
     ("fig3_accuracy_vs_cycles", accuracy_vs_cycles.main),

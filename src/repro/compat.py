@@ -18,7 +18,23 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["set_mesh", "current_mesh", "shard_map", "cost_analysis_dict"]
+__all__ = ["set_mesh", "current_mesh", "shard_map", "make_mesh",
+           "cost_analysis_dict"]
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` where it exists (0.4.35+ / 0.5+), else a manual
+    ``Mesh`` over the first prod(shape) devices — same device order as
+    ``make_mesh``'s default."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+    import numpy as np
+
+    n = 1
+    for s in shape:
+        n *= s
+    devs = np.asarray(jax.devices()[:n]).reshape(tuple(shape))
+    return jax.sharding.Mesh(devs, tuple(axis_names))
 
 
 def set_mesh(mesh):

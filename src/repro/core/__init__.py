@@ -52,6 +52,7 @@ from repro.core.solver_batched import (
     BatchedAllocation,
     BatchedProblems,
     apply_active_mask,
+    apply_sampling_mask,
     batched_avg_staleness,
     batched_max_staleness,
     batched_policy,
@@ -88,6 +89,7 @@ __all__ = [
     "MarkovAvailability",
     "TraceAvailability",
     "apply_active_mask",
+    "apply_sampling_mask",
     "availability_masks",
     "capacity_state_coupled",
     "has_availability",

@@ -60,6 +60,7 @@ __all__ = [
     "batched_avg_staleness",
     "batched_summary",
     "apply_active_mask",
+    "apply_sampling_mask",
 ]
 
 _INT_SENTINEL = 2**31 - 1
@@ -698,3 +699,20 @@ def apply_active_mask(total_i, d_lo, d_hi, valid, active):
         total.astype(lo.dtype), jnp.sum(lo, axis=-1), jnp.sum(hi, axis=-1)
     )
     return tot.astype(total.dtype), lo, hi, v
+
+
+def apply_sampling_mask(total_i, d_lo, d_hi, valid, sampled):
+    """Project a fleet-axis policy problem onto the round's sampled fleets.
+
+    ``sampled`` is a per-fleet ``(B,)`` bool mask (FedAST-style partial
+    participation: only a subset of fleets is served each round). A
+    sampled-out fleet is treated exactly like an all-offline fleet, which
+    in turn is exactly a row of ``BatchedProblems`` padded slots: zero
+    boxes, ``valid=False`` everywhere, budget degraded to zero — so the
+    policies solve tau = d = 0 for it without going infeasible. This is
+    ``apply_active_mask`` with the mask broadcast over the learner axis;
+    the equivalence of the three maskings is pinned by the fleet property
+    tests. Traced or host, same as ``apply_active_mask``.
+    """
+    act = jnp.asarray(sampled, bool)[..., None] & jnp.asarray(valid, bool)
+    return apply_active_mask(total_i, d_lo, d_hi, valid, act)

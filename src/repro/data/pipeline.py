@@ -87,14 +87,26 @@ class FederatedPartitioner:
 
     def __init__(self, dataset: Dataset, seed: int = 0):
         self.dataset = dataset
-        self.rng = np.random.default_rng(seed)
+        self.seed = int(seed)
+        self.draws = 0   # index of the next draw (the fold-in key)
 
     def draw_indices(self, total: int) -> np.ndarray:
-        """One cycle's sample indices (total,) — rng consumption depends only
-        on ``total``, so any split of the same total (``draw``) and a flat
-        pre-staged draw (the fused reallocation path, which splits by traced
-        d inside the scan) see identical samples."""
-        return self.rng.choice(self.dataset.size, size=int(total), replace=False)
+        """One cycle's sample indices (total,).
+
+        Every call is keyed by the explicit fold-in pair ``(seed, draw
+        index)`` — a fresh generator per draw, no state carried between
+        calls — so draw ``i`` depends only on ``(seed, i, total)``: not on
+        the sizes of earlier draws, not on iteration order elsewhere, not
+        on any global PRNG, and not on the process running it. Any split
+        of the same total (``draw``) and a flat pre-staged draw (the fused
+        reallocation path, which splits by traced d inside the scan) see
+        identical samples, and the draw sequence is bit-stable across
+        processes (``SeedSequence`` hashing is part of numpy's spec)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence((self.seed, self.draws))
+        )
+        self.draws += 1
+        return rng.choice(self.dataset.size, size=int(total), replace=False)
 
     def draw(self, d: np.ndarray) -> list[Dataset]:
         """d: (K,) integer batch sizes, sum <= dataset size. Disjoint shards."""

@@ -795,6 +795,9 @@ class AsyncFedEngine:
             )
         if horizon is None:
             raise ValueError("event mode needs a virtual-time horizon")
+        # counters describe THIS run only: reset before building, so a
+        # schedule build that raises cannot leave the previous run's tallies
+        self.fault_counters = _zero_fault_counters()
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
         self.fault_counters = sched.counters
@@ -1063,6 +1066,7 @@ class AsyncFedEngine:
                 "program via Orchestrator.run_fused; run_events is the "
                 "event-driven fast path"
             )
+        self.fault_counters = _zero_fault_counters()   # this run's tallies only
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
         self.fault_counters = sched.counters
@@ -1114,6 +1118,7 @@ class AsyncFedEngine:
             )
         if num_buckets < 1:
             raise ValueError("num_buckets must be >= 1")
+        self.fault_counters = _zero_fault_counters()   # this run's tallies only
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
         self.fault_counters = sched.counters

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import numpy as np
 
@@ -41,6 +42,7 @@ __all__ = [
     "run_async_experiment",
     "async_mode_sweep",
     "churn_sweep",
+    "fleet_scale_sweep",
 ]
 
 
@@ -610,4 +612,78 @@ def churn_sweep(
                 "staleness_max": s["staleness"]["max"],
                 "faults": s["faults"],
             })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# population-scale fleet-of-fleets federation (fed.fleet)
+# ---------------------------------------------------------------------------
+
+def fleet_scale_sweep(
+    fleet_counts=(4, 16),
+    *,
+    k: int = 4,
+    rounds: int = 3,
+    T: float = 6.0,
+    total_samples: int = 40,
+    participation: float = 0.5,
+    features: int = 64,
+    hidden: int = 32,
+    seed: int = 0,
+    mesh=None,
+    train: Dataset | None = None,
+    test: Dataset | None = None,
+) -> list[dict]:
+    """Population-scale rows: one two-tier ``FleetEngine`` run per fleet
+    count F — F fleets x ``k`` learners on sharded fleet tensors, FedAST
+    partial participation at ``participation``, a compact
+    ``[features, hidden, 10]`` model so the per-round cost is dominated by
+    the fleet machinery rather than one matmul.
+
+    Every fleet trains every round (unsampled fleets keep working on their
+    stale pull), so one global round of virtual-time T simulates F x k
+    busy learners: the reported ``learners_per_vtu`` is exactly F x k.
+    ``mesh=None`` takes ``launch.mesh.host_mesh()`` — a real (2, 4)
+    ``shard_map`` partition under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the 1-device
+    mesh elsewhere. Feeds ``benchmarks/fleet_scale.py``."""
+    from repro.fed.fleet import FleetConfig, FleetEngine, build_fleet_problems
+
+    if train is None or test is None:
+        train, test = synthetic_mnist(
+            6000, n_test=2000, features=features, seed=seed
+        )
+    params = mlp.init(jax.random.key(seed), layers=[features, hidden, 10])
+    cfg = FleetConfig(participation=participation)
+    rows: list[dict] = []
+    for f in fleet_counts:
+        bp = build_fleet_problems(
+            int(f), k, T=T, total_samples=total_samples, seed=seed
+        )
+        eng = FleetEngine(cfg, bp, mlp.loss, params, seed=seed, mesh=mesh)
+        t0 = time.time()
+        hist = eng.run(
+            train, rounds, eval_fn=mlp.accuracy,
+            eval_batch=(test.x[:1000], test.y[:1000]),
+        )
+        wall = time.time() - t0
+        learners = int(f) * k
+        rows.append({
+            "F": int(f),
+            "K": k,
+            "learners": learners,
+            "rounds": rounds,
+            "participation": participation,
+            "mesh_devices": int(np.prod(list(eng.mesh.shape.values()))),
+            "fleet_axes": list(eng.fleet_axes),
+            "learners_per_vtu": learners,
+            "final_accuracy": float(hist[-1]["accuracy"]),
+            "fleet_staleness_max": max(
+                r["fleet_staleness_max"] for r in hist
+            ),
+            "wall_s": round(wall, 3),
+            "learner_rounds_per_s": round(
+                learners * rounds / max(wall, 1e-9), 1
+            ),
+        })
     return rows

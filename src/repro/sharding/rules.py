@@ -26,7 +26,15 @@ from typing import Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["TRAIN_RULES", "SERVE_RULES", "resolve_spec", "tree_shardings", "input_shardings"]
+__all__ = [
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "FLEET_RULES",
+    "resolve_spec",
+    "tree_shardings",
+    "input_shardings",
+    "fleet_partition_axes",
+]
 
 # logical axis -> ordered candidates; each candidate is a tuple of mesh axes
 TRAIN_RULES: dict[str, list[tuple[str, ...]]] = {
@@ -57,6 +65,31 @@ EXPERT_PARALLEL_RULES: dict[str, list[tuple[str, ...]]] = {
     "experts": [("model",)],
     "moe_mlp": [],
 }
+
+# fleet-of-fleets federation (fed/fleet.py): the leading "fleet" axis of
+# every (F, K, ...) fleet tensor spreads over ALL mesh axes when F divides
+# the full device count (edge fleets are embarrassingly parallel until the
+# global merge), degrading to the data axis alone, then to replication.
+# "learner" (the K axis) stays per-device: one fleet's solve/train is the
+# unit of work.
+FLEET_RULES: dict[str, list[tuple[str, ...]]] = {
+    "fleet": [("pod", "data", "model"), ("data", "model"), ("data",)],
+    "learner": [],
+    "sample": [],
+    "feature": [],
+}
+
+
+def fleet_partition_axes(f: int, mesh: Mesh) -> tuple[str, ...]:
+    """The mesh axes the fleet dimension of an ``(F, ...)`` tensor is
+    actually split over under ``FLEET_RULES`` — i.e. the axes a global
+    merge must ``psum`` across. Empty tuple = fleet axis replicated (the
+    1-device test mesh, or an F no candidate divides)."""
+    spec = resolve_spec(("fleet",), (f,), mesh, FLEET_RULES)
+    entry = spec[0] if len(spec) else None
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
 
 
 def resolve_spec(

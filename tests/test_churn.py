@@ -220,6 +220,32 @@ def test_fault_free_counters_are_zero(data):
     assert all(c[k] == 0 for k in FAULT_COUNTERS if k != "dispatches")
 
 
+def test_fault_counters_reset_per_run(data):
+    """Counters tally the LAST run only. Rerunning the same engine yields
+    the identical counter dict (all-drop tallies are schedule-independent:
+    K dispatches, K drops), never an accumulated one; and a run whose
+    schedule build raises mid-way resets to zeros instead of leaving the
+    previous run's tallies dangling (the old reporting bug)."""
+    train, _ = data
+    prob = _prob()
+    eng = AsyncFedEngine(AsyncConfig(mode="fedasync", drop_rate=1.0),
+                         prob, mlp.loss, mlp.init(jax.random.key(0)), seed=2)
+    eng.run(train, 30.0)
+    first = dict(eng.fault_counters)
+    assert first["dispatches"] == first["drops"] == prob.num_learners
+    eng.run(train, 30.0)
+    assert eng.fault_counters == first          # identical, not doubled
+    eng.run_events(train, 30.0)
+    assert eng.fault_counters == first          # same seam on the fast path
+    # a schedule build that raises (shard draw larger than the dataset)
+    # leaves zeroed counters, not the completed run's
+    tiny, _ = synthetic_mnist(4, n_test=4, seed=0)
+    with pytest.raises(ValueError):
+        eng.run(tiny, 30.0)
+    assert set(eng.fault_counters) == set(FAULT_COUNTERS)
+    assert all(v == 0 for v in eng.fault_counters.values())
+
+
 def test_quorum_timer_flushes_partial_buffers(data):
     """With churned uploads a full M-buffer never forms; the quorum timer
     flushes partial groups (extending once below quorum) so the server

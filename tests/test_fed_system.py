@@ -32,6 +32,15 @@ def test_partitioner_sizes_and_disjoint():
     d = np.array([100, 300, 50])
     shards = part.draw(d)
     assert [s.size for s in shards] == [100, 300, 50]
+    # one replace=False draw split contiguously: shards are disjoint ...
+    flat = np.concatenate([np.asarray(s.x).view(np.uint8).reshape(s.size, -1)
+                           for s in shards])
+    assert len(np.unique(flat, axis=0)) == 450
+    # ... and, with (seed, draw-index)-keyed draws, cross-process stable
+    np.testing.assert_array_equal(
+        FederatedPartitioner(train, seed=0).draw_indices(450)[:6],
+        [1902, 1843, 896, 84, 1768, 974],
+    )
 
 
 def test_local_train_masked_tau():
