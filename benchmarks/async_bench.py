@@ -46,11 +46,10 @@ def bench_modes(*, ks, T: float, cycles: int, total: int, seed: int = 0) -> list
 def bench_engine(*, horizon_cycles: int = 6, seed: int = 0) -> dict:
     """Eager event loop vs jagged (run_events) vs legacy grid
     (run_bucketed): same schedule, same aggregations on all three."""
-    import warnings
-
     import jax
+    import numpy as np
 
-    from repro.data.pipeline import synthetic_mnist
+    from repro.data.pipeline import FederatedPartitioner, synthetic_mnist
     from repro.fed.async_engine import AsyncConfig, AsyncFedEngine
     from repro.fed.simulation import build_spread_problem
     from repro.models import mlp
@@ -65,11 +64,14 @@ def bench_engine(*, horizon_cycles: int = 6, seed: int = 0) -> dict:
         eng = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
         return eng, eng.run(train, horizon)
 
+    # smallest exact grid for the benchmarked grid path, read off a probe
+    # engine's schedule (same seed -> same schedule; probes are discarded)
     probe = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
-    with warnings.catch_warnings():
-        # the grid path is benchmarked deliberately (jagged-vs-grid rows)
-        warnings.simplefilter("ignore", DeprecationWarning)
-        nb = probe.suggest_num_buckets(train, horizon)
+    part = FederatedPartitioner(train, seed=int(probe.rng.integers(2**31)))
+    sched = probe._build_schedule(part, horizon, 100_000)
+    ts = sorted(a.t for a in sched.arrivals if a.flush_id >= 0)
+    gaps = [b - a for a, b in zip(ts, ts[1:])]
+    nb = int(np.ceil(horizon / min(gaps))) + 1
 
     def bucketed():
         eng = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=seed)
@@ -111,7 +113,7 @@ def bench_engine(*, horizon_cycles: int = 6, seed: int = 0) -> dict:
 
 def bench_engine_near_tie(*, horizon_cycles: int = 4, seed: int = 0) -> dict:
     """The regime the grid cannot serve: a KKT near-tie fleet (capacity
-    spread ~1e-7) where ``suggest_num_buckets`` would need millions of
+    spread ~1e-7) where an exact uniform grid would need millions of
     buckets. Only the eager loop and the jagged scan can replay it —
     the ``jagged_only`` row records that plus their relative speed."""
     import numpy as np

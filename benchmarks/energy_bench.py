@@ -1,0 +1,58 @@
+"""Energy-frontier benchmark: budgeted KKT allocation vs energy-blind
+schemes across per-learner battery budgets (``--only energy``).
+
+Runs ``fed.simulation.energy_sweep`` — the async engine at equal virtual
+time, per-dispatch budgeted re-solves for ``kkt_energy``, the same fleet
+with the energy model attached for accounting only under the blind
+schemes — at >= 3 budget levels anchored to the blind allocation's own
+median per-learner cycle energy, and merges the accuracy / joules /
+violation rows into ``BENCH_alloc.json`` under the ``energy`` section.
+
+``kkt_energy`` rows must report zero violations (budget satisfaction is
+by construction); the blind rows' violation counts are scored externally
+against the same budget and are the frontier's cost axis.
+
+  PYTHONPATH=src python -m benchmarks.run --only energy
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.alloc_bench import _merge_out
+from repro.fed.simulation import energy_sweep
+
+
+def main(quick: bool = False) -> None:
+    budget_fracs = (0.5, 0.75, 1.0) if quick else (0.4, 0.6, 0.8, 1.0, 1.25)
+    cycles = 4 if quick else 10
+    total = 400 if quick else 1200
+    t0 = time.time()
+    rows = energy_sweep(
+        budget_fracs, k=4, T=8.0, cycles=cycles, total_samples=total, seed=0,
+    )
+    elapsed = time.time() - t0
+    for r in rows:
+        print(
+            f"  frac={r['budget_frac']:.2f} {r['scheme']:<11} "
+            f"acc={round(r['final_accuracy'], 4)} "
+            f"J={r['joules_total']:.1f} p99={r['joules_p99']:.2f} "
+            f"viol={r['violations']} aggs={r['aggregations']:>3}"
+        )
+    aware = [r for r in rows if r["energy_aware"]]
+    bad = [r for r in aware if r["violations"]]
+    if bad:
+        raise AssertionError(
+            f"kkt_energy must satisfy its budget by construction: {bad}"
+        )
+    _merge_out("energy", {
+        "mode": "fedasync",
+        "cycles": cycles,
+        "budget_fracs": list(budget_fracs),
+        "sweep": rows,
+        "elapsed_s": round(elapsed, 2),
+    })
+
+
+if __name__ == "__main__":
+    main()

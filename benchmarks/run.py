@@ -15,6 +15,9 @@ Sections:
   churn     adaptive KKT vs static/equal allocation under client churn +
             fault injection at rising dropout rates (merges into
             BENCH_alloc.json)
+  energy    accuracy-vs-energy frontier: budgeted kkt_energy vs the
+            energy-blind schemes across battery budgets (merges into
+            BENCH_alloc.json)
   fleet     fleet-of-fleets scale: FleetEngine rounds at 10^4 learners +
             the sharded dispatch solve at 10^6 learners (merges into
             BENCH_alloc.json)
@@ -33,6 +36,7 @@ from benchmarks import (
     alloc_bench,
     async_bench,
     churn_bench,
+    energy_bench,
     fleet_scale,
     kernel_bench,
     roofline_report,
@@ -47,11 +51,47 @@ SECTIONS = [
     ("realloc_bench", alloc_bench.realloc_main),
     ("async_bench", async_bench.main),
     ("churn_bench", churn_bench.main),
+    ("energy_bench", energy_bench.main),
     ("fleet_scale", fleet_scale.main),
     ("kernel_bench", kernel_bench.main),
     ("roofline_report", roofline_report.main),
     ("fig3_accuracy_vs_cycles", accuracy_vs_cycles.main),
 ]
+
+
+def _count_rows(payload) -> int:
+    """Row count of one merged section: list payloads count directly,
+    dict payloads count their largest list value (sweep rows)."""
+    if isinstance(payload, list):
+        return len(payload)
+    if isinstance(payload, dict):
+        return max(
+            (_count_rows(v) for v in payload.values() if isinstance(v, (list, dict))),
+            default=1,
+        )
+    return 1
+
+
+def _section_summary(before: dict) -> str | None:
+    """One line per section the last bench merged into BENCH_alloc.json:
+    rows, producing device, written_at — compared against the file state
+    BEFORE the bench ran, so only freshly (re)written sections print."""
+    import json
+
+    if not alloc_bench.OUT_PATH.exists():
+        return None
+    data = json.loads(alloc_bench.OUT_PATH.read_text())
+    lines = []
+    for name, sec in data.items():
+        if name == "bench" or sec == before.get(name):
+            continue
+        if not (isinstance(sec, dict) and "data" in sec):
+            continue
+        lines.append(
+            f"# {name}: {_count_rows(sec['data'])} rows, "
+            f"device={sec.get('device')}, written_at={sec.get('written_at')}"
+        )
+    return "\n".join(lines) if lines else None
 
 
 def main() -> None:
@@ -61,12 +101,19 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
+    import json
+
     for name, fn in SECTIONS:
         if args.only and args.only not in name:
             continue
         print(f"\n===== {name} =====", flush=True)
+        before = (json.loads(alloc_bench.OUT_PATH.read_text())
+                  if alloc_bench.OUT_PATH.exists() else {})
         t0 = time.time()
         fn(quick=quick)
+        summary = _section_summary(before)
+        if summary:
+            print(summary, flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
 
 

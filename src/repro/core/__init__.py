@@ -33,6 +33,12 @@ Public surface (see ``docs/architecture.md`` for the layer map and
   protocol, composable with a base capacity drift), ``availability_masks``,
   ``has_availability`` / ``capacity_state_coupled`` (protocol probes),
   ``apply_active_mask`` (offline-slot masking for the batched solve).
+* **Energy** — ``EnergyModel`` (per-cycle joule coefficients e2/e1/e0,
+  arXiv 2012.00143), ``solve_kkt_energy`` / ``solve_energy_batched``
+  (the budgeted pipeline, also traced as ``batched_policy("kkt_energy")``),
+  ``apply_energy_mask`` (affordability masking), ``BatteryDrift``
+  (battery-drain availability: dispatched work drains, recharge refills,
+  empty = offline).
 """
 
 from repro.core.allocation import Allocation, AllocationProblem
@@ -47,20 +53,24 @@ from repro.core.availability import (
 from repro.core.aggregation import aggregate, fedavg_weights, staleness_weights
 from repro.core.baselines import solve_eta, solve_synchronous
 from repro.core.complexity import ModelCost, mlp_cost, mnist_dnn_cost, transformer_cost
+from repro.core.energy import BatteryDrift, EnergyModel
 from repro.core.solver_batched import (
     TRACED_POLICIES,
     BatchedAllocation,
     BatchedProblems,
     apply_active_mask,
+    apply_energy_mask,
     apply_sampling_mask,
     batched_avg_staleness,
     batched_max_staleness,
     batched_policy,
     batched_summary,
+    solve_energy_batched,
     solve_eta_batched,
     solve_kkt_batched,
 )
 from repro.core.solver_kkt import solve as solve_kkt_sai
+from repro.core.solver_kkt import solve_energy as solve_kkt_energy
 from repro.core.solver_kkt import solve_relaxed, suggest_and_improve
 from repro.core.solver_numeric import solve_pgd_batched, solve_pgd_jax, solve_slsqp
 from repro.core.staleness import (
@@ -95,6 +105,8 @@ __all__ = [
     "has_availability",
     "TRACED_POLICIES",
     "BatchedAllocation",
+    "BatteryDrift",
+    "EnergyModel",
     "BatchedProblems",
     "batched_avg_staleness",
     "batched_max_staleness",
@@ -102,6 +114,9 @@ __all__ = [
     "batched_summary",
     "solve_eta_batched",
     "solve_kkt_batched",
+    "solve_kkt_energy",
+    "solve_energy_batched",
+    "apply_energy_mask",
     "CapacityDrift",
     "ChannelParams",
     "LearnerProfile",

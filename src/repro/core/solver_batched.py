@@ -56,10 +56,12 @@ __all__ = [
     "batched_policy",
     "solve_kkt_batched",
     "solve_eta_batched",
+    "solve_energy_batched",
     "batched_max_staleness",
     "batched_avg_staleness",
     "batched_summary",
     "apply_active_mask",
+    "apply_energy_mask",
     "apply_sampling_mask",
 ]
 
@@ -91,6 +93,13 @@ class BatchedProblems:
         slots never enter staleness objectives/metrics or the sum
         constraint (sum_k d_k = total ranges over valid slots only, which
         the zero box enforces).
+
+    The optional energy rows ``e2/e1/e0`` + per-learner budgets
+    ``e_budget`` (arXiv 2012.00143; see ``core/energy.py``) default to
+    None — the energy-blind layout every pre-energy call site builds.
+    ``energy_rows()`` materializes the zero-coefficient / infinite-budget
+    rows in that case, under which ``kkt_energy`` is decision-identical
+    to ``kkt_sai``.
     """
 
     c2: np.ndarray        # (B, K)
@@ -101,6 +110,10 @@ class BatchedProblems:
     d_lo: np.ndarray      # (B, K)
     d_hi: np.ndarray      # (B, K)
     valid: np.ndarray     # (B, K) bool
+    e2: np.ndarray | None = None        # (B, K) optional energy rows
+    e1: np.ndarray | None = None        # (B, K)
+    e0: np.ndarray | None = None        # (B, K)
+    e_budget: np.ndarray | None = None  # (B, K) joules, +inf = unconstrained
 
     @property
     def num_problems(self) -> int:
@@ -110,6 +123,24 @@ class BatchedProblems:
     def max_learners(self) -> int:
         return int(self.c2.shape[1])
 
+    @property
+    def has_energy(self) -> bool:
+        return self.e2 is not None
+
+    def energy_rows(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(e2, e1, e0, e_budget) float64 rows; zero coefficients and +inf
+        budgets when the struct carries no energy model (the regime where
+        ``kkt_energy`` reproduces ``kkt_sai``)."""
+        b, k = self.c2.shape
+        if self.e2 is None:
+            z = np.zeros((b, k))
+            return z, z.copy(), z.copy(), np.full((b, k), np.inf)
+        eb = (np.full((b, k), np.inf) if self.e_budget is None
+              else np.asarray(self.e_budget, np.float64))
+        return (np.asarray(self.e2, np.float64),
+                np.asarray(self.e1, np.float64),
+                np.asarray(self.e0, np.float64), eb)
+
     @staticmethod
     def from_problems(problems: "list[AllocationProblem]") -> "BatchedProblems":
         b = len(problems)
@@ -118,6 +149,11 @@ class BatchedProblems:
         d_lo = np.zeros((b, k)); d_hi = np.zeros((b, k))
         valid = np.zeros((b, k), bool)
         T = np.zeros(b); total = np.zeros(b, np.int64)
+        any_energy = any(p.energy is not None for p in problems)
+        if any_energy:
+            # padded slots: zero cost, infinite budget (never binding)
+            e2 = np.zeros((b, k)); e1 = np.zeros((b, k)); e0 = np.zeros((b, k))
+            eb = np.full((b, k), np.inf)
         for i, p in enumerate(problems):
             n = p.num_learners
             tm = p.time_model
@@ -127,18 +163,36 @@ class BatchedProblems:
             valid[i, :n] = True
             T[i] = p.T
             total[i] = p.total_samples
-        return BatchedProblems(c2, c1, c0, T, total, d_lo, d_hi, valid)
+            if any_energy and p.energy is not None:
+                er2, er1, er0, erb = p.energy_rows()
+                e2[i, :n], e1[i, :n], e0[i, :n] = er2, er1, er0
+                eb[i, :n] = erb
+        if not any_energy:
+            return BatchedProblems(c2, c1, c0, T, total, d_lo, d_hi, valid)
+        return BatchedProblems(c2, c1, c0, T, total, d_lo, d_hi, valid,
+                               e2, e1, e0, eb)
 
     def problem(self, i: int) -> AllocationProblem:
         """Reconstruct the i-th (unpadded) AllocationProblem."""
+        from repro.core.energy import EnergyModel
+
         v = self.valid[i]
         tm = TimeModel(c2=self.c2[i, v], c1=self.c1[i, v], c0=self.c0[i, v])
+        energy = e_budget = None
+        if self.has_energy:
+            energy = EnergyModel(
+                e2=self.e2[i, v], e1=self.e1[i, v], e0=self.e0[i, v]
+            )
+            if self.e_budget is not None:
+                e_budget = self.e_budget[i, v]
         return AllocationProblem(
             time_model=tm,
             T=float(self.T[i]),
             total_samples=int(self.total[i]),
             d_lower=int(round(float(self.d_lo[i, v].min()))),
             d_upper=int(round(float(self.d_hi[i, v].max()))),
+            energy=energy,
+            e_budget=e_budget,
         )
 
 
@@ -232,6 +286,32 @@ def _max_tau_of_d(d, c2, c1, c0, T):
     return jnp.maximum(t, 0.0).astype(d.dtype)
 
 
+#: "unbounded tau" sentinel of the energy cap. Finite (``floor(inf) ->
+#: int`` is undefined) and exactly representable in float32 — 2**31 - 1
+#: would round UP to 2**31 and overflow int32 on the f32 fast path. Far
+#: above any deadline-feasible tau, so ``min(time_cap, _TAU_BIG)`` is the
+#: time cap whenever the budget does not bind.
+_TAU_BIG = 2**30
+
+
+def _max_tau_energy(d, e2, e1, e0, eb):
+    """Largest integer tau with E_k <= eb at integer d — the energy twin
+    of ``_max_tau_of_d``. Unbounded where compute is free (e2 = 0) or the
+    budget is infinite; 0 where even tau = 0 busts the budget (the
+    affordability mask removes such learners before any solve)."""
+    df = d.astype(e2.dtype)
+    num = eb - e0 - e1 * df
+    den = e2 * df
+    raw = jnp.where(
+        den > 0, num / jnp.where(den > 0, den, 1.0),
+        jnp.where(num >= 0, jnp.inf, -1.0),
+    )
+    t = jnp.floor(raw)
+    t = jnp.where(jnp.isfinite(t), t, float(_TAU_BIG))
+    t = jnp.where(d > 0, t, 0.0)
+    return jnp.maximum(t, 0.0).astype(d.dtype)
+
+
 def _relaxed_batched(c2, c1, c0, T, total_f, d_lo, d_hi, *, tol, max_iter,
                      use_pallas, interpret):
     """Lockstep water-filling bisection over the (B,) batch. Mirrors
@@ -299,6 +379,82 @@ def _relaxed_batched(c2, c1, c0, T, total_f, d_lo, d_hi, *, tol, max_iter,
     return feasible, tau_star, tau, d, steps
 
 
+def _relaxed_energy_batched(c2, c1, c0, T, e2, e1, e0, eb, total_f, d_lo,
+                            d_hi, *, tol, max_iter):
+    """Energy-budgeted lockstep water-filling (arXiv 2012.00143): the same
+    bisection as ``_relaxed_batched`` on the residual
+
+        sum_k clip(min(d_time(tau*), d_energy(tau*)), d_lo, d_hi) - total
+
+    where ``d_time = (T - c0)/(c2 tau* + c1)`` is the deadline hyperbola
+    and ``d_energy = (eb - e0)/(e2 tau* + e1)`` the budget hyperbola — the
+    most data each learner can absorb at water level tau* under BOTH
+    constraints. The time branch replicates ``waterfill_residual_ref``'s
+    op order exactly, and IEEE inf arithmetic makes ``min(d_time, inf)``
+    select the time curve bitwise, so the whole stage degenerates to
+    ``_relaxed_batched`` when no budget binds (eb = +inf). jnp-reference
+    only (no Pallas kernel for the energy residual yet)."""
+
+    def resid(tau_star):
+        dt = (T[:, None] - c0) / (c2 * tau_star[:, None] + c1)
+        de = (eb - e0) / (e2 * tau_star[:, None] + e1)
+        return jnp.clip(jnp.minimum(dt, de), d_lo, d_hi).sum(axis=-1) - total_f
+
+    b = c2.shape[0]
+    zero = jnp.zeros((b,), c2.dtype)
+    feasible = resid(zero) >= -1e-9
+
+    def gcond(state):
+        _, it, r = state
+        return jnp.any(r > 0) & (it < 200)
+
+    def gbody(state):
+        hi, it, r = state
+        hi = jnp.where(r > 0, hi * 2.0, hi)
+        return hi, it + 1, resid(hi)
+
+    hi0 = jnp.ones((b,), c2.dtype)
+    hi0, _, _ = jax.lax.while_loop(gcond, gbody, (hi0, 0, resid(hi0)))
+
+    def bcond(state):
+        lo, hi, steps, done = state
+        return jnp.any(~done) & (steps < max_iter)
+
+    def bbody(state):
+        lo, hi, steps, done = state
+        mid = 0.5 * (lo + hi)
+        r = resid(mid)
+        upd = ~done
+        lo = jnp.where(upd & (r > 0), mid, lo)
+        hi = jnp.where(upd & (r <= 0), mid, hi)
+        done = done | (hi - lo < tol * jnp.maximum(1.0, hi))
+        return lo, hi, steps + 1, done
+
+    lo = jnp.zeros((b,), c2.dtype)
+    lo, hi, steps, _ = jax.lax.while_loop(
+        bcond, bbody, (lo, hi0, 0, jnp.zeros((b,), bool))
+    )
+    tau_star = 0.5 * (lo + hi)
+
+    dt = (T[:, None] - c0) / (c2 * tau_star[:, None] + c1)
+    de = (eb - e0) / (e2 * tau_star[:, None] + e1)
+    d = jnp.clip(jnp.minimum(dt, de), d_lo, d_hi)
+    free = (d > d_lo + 1e-9) & (d < d_hi - 1e-9)
+    gap = total_f - d.sum(axis=-1)
+    fsum = jnp.sum(jnp.where(free, d, 0.0), axis=-1)
+    add = jnp.where(
+        free & (fsum > 0)[:, None],
+        gap[:, None] * d / jnp.where(fsum > 0, fsum, 1.0)[:, None],
+        0.0,
+    )
+    d = jnp.clip(d + add, d_lo, d_hi)
+    # tau is the tightest of the two per-learner caps at the final d
+    tau_t = (T[:, None] - c0 - c1 * d) / (c2 * d)
+    tau_e = (eb - e0 - e1 * d) / (e2 * d)
+    tau = jnp.where(d > 0, jnp.maximum(jnp.minimum(tau_t, tau_e), 0.0), 0.0)
+    return feasible, tau_star, tau, d, steps
+
+
 def _integerize_one(d_real, total_i, lo_i, hi_i):
     """Largest-remainder rounding to exact sum within bounds — the
     ``solver_kkt._integerize_d`` loop as a bounded while_loop."""
@@ -328,17 +484,26 @@ def _integerize_one(d_real, total_i, lo_i, hi_i):
     return base, deficit
 
 
-def _sai_one(d0, c2, c1, c0, T, lo_i, hi_i, valid, *, max_rounds):
+def _sai_one(d0, c2, c1, c0, T, lo_i, hi_i, valid, *, max_rounds,
+             energy=None):
     """Greedy suggest-and-improve repair (``solver_kkt.suggest_and_improve``)
     as a bounded while_loop: move samples from the min-tau learner to the
-    highest-tau learner with headroom while staleness improves."""
+    highest-tau learner with headroom while staleness improves.
+
+    With ``energy = (e2, e1, e0, eb)`` rows, every tau is additionally
+    capped by the budget (``_max_tau_energy``), so any d within the
+    energy-tightened box yields a budget-respecting (tau, d) by
+    construction — SAI moves can never overspend."""
 
     int_dtype = d0.dtype
     neg_one = jnp.asarray(-1, int_dtype)
     sentinel = jnp.asarray(_INT_SENTINEL, int_dtype)
 
     def tau_of(d):
-        return _max_tau_of_d(d, c2, c1, c0, T)
+        t = _max_tau_of_d(d, c2, c1, c0, T)
+        if energy is None:
+            return t
+        return jnp.minimum(t, _max_tau_energy(d, *energy))
 
     def stats(tau):
         tmax = jnp.max(jnp.where(valid, tau, neg_one))
@@ -395,11 +560,19 @@ def _sai_one(d0, c2, c1, c0, T, lo_i, hi_i, valid, *, max_rounds):
     return tau, d, rounds
 
 
+def _sai_one_energy(d0, c2, c1, c0, T, lo_i, hi_i, valid, e2, e1, e0, eb, *,
+                    max_rounds):
+    """``_sai_one`` with the energy rows as vmappable positional args."""
+    return _sai_one(d0, c2, c1, c0, T, lo_i, hi_i, valid,
+                    max_rounds=max_rounds, energy=(e2, e1, e0, eb))
+
+
 def _integerize_and_repair(d_r, feasible, c2, c1, c0, T, total_i, d_lo, d_hi,
-                           valid, *, max_rounds):
+                           valid, *, max_rounds, energy=None):
     """Shared integer tail of every batched policy: largest-remainder
     rounding to the exact sum, then greedy SAI repair (both vmapped bounded
-    while_loops). Returns (tau, d, feasible, sai_rounds)."""
+    while_loops). Returns (tau, d, feasible, sai_rounds). ``energy`` rows
+    (if given) cap every tau the SAI stage assigns by the budget."""
     lo_i = jnp.round(d_lo).astype(total_i.dtype)
     hi_i = jnp.round(d_hi).astype(total_i.dtype)
     # neutralize infeasible rows so the integer repair loops terminate fast
@@ -411,9 +584,14 @@ def _integerize_and_repair(d_r, feasible, c2, c1, c0, T, total_i, d_lo, d_hi,
     # for hand-built structs whose box is infeasible — AllocationProblem
     # rejects those up front) must not masquerade as a solution
     feasible = feasible & (leftover == 0)
-    tau, d, rounds = jax.vmap(
-        functools.partial(_sai_one, max_rounds=max_rounds)
-    )(d_int, c2, c1, c0, T, lo_i, hi_i, valid)
+    if energy is None:
+        tau, d, rounds = jax.vmap(
+            functools.partial(_sai_one, max_rounds=max_rounds)
+        )(d_int, c2, c1, c0, T, lo_i, hi_i, valid)
+    else:
+        tau, d, rounds = jax.vmap(
+            functools.partial(_sai_one_energy, max_rounds=max_rounds)
+        )(d_int, c2, c1, c0, T, lo_i, hi_i, valid, *energy)
     return tau, d, feasible, rounds
 
 
@@ -447,6 +625,75 @@ def _solve_kkt_batched_impl(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *,
         c2, c1, c0, T, total_i, d_lo, d_hi, valid,
         tol=tol, max_iter=max_iter, max_rounds=max_rounds,
         use_pallas=use_pallas, interpret=interpret,
+    )
+
+
+def apply_energy_mask(total_i, d_lo, d_hi, valid, energy):
+    """Project a ``(B, K)`` policy problem onto its *affordable* sub-fleet.
+
+    The budget at tau = 0 caps each learner's data at ``(eb - e0) / e1``
+    samples; the upper bound is tightened to that cap, and a learner whose
+    cap cannot even cover its ``d_lo`` is masked out entirely through
+    ``apply_active_mask`` — the padded-slot semantics, exactly like an
+    offline learner under churn. The per-fleet budget is clipped into the
+    surviving fleet's box (feasible-or-degraded; an all-unaffordable
+    fleet degrades to a zero budget rather than going infeasible).
+
+    IEEE inf arithmetic makes an infinite budget a bitwise no-op: the cap
+    is +inf, ``min(inf, d_hi) = d_hi``, every learner affordable. Only
+    elementwise ``jnp``, so traced or host, like ``apply_active_mask``.
+
+    Returns ``(total, d_lo, d_hi, valid)``.
+    """
+    e2, e1, e0, eb = energy
+    lo = jnp.asarray(d_lo)
+    hi = jnp.asarray(d_hi)
+    room = eb - e0
+    capf = jnp.where(
+        e1 > 0, room / jnp.where(e1 > 0, e1, 1.0),
+        jnp.where(room >= 0, jnp.inf, -1.0),
+    )
+    hi_e = jnp.clip(jnp.minimum(jnp.floor(capf), hi), 0.0, hi)
+    affordable = hi_e >= lo
+    return apply_active_mask(total_i, lo, hi_e, valid, affordable)
+
+
+def _kkt_energy_core(c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy, *,
+                     tol, max_iter, max_rounds):
+    """Traced energy-budgeted KKT pipeline (``scheme="kkt_energy"``):
+    affordability mask -> budgeted water-filling -> integerize -> SAI with
+    energy-capped taus. Every stage keeps ``E_k(tau, d) <= eb_k`` by
+    construction (integer d never exceeds the tau=0 cap, integer tau never
+    exceeds the energy cap at that d), so solutions carry ZERO budget
+    violations — the property the energy tests pin."""
+    e2, e1, e0, eb = (jnp.asarray(x) for x in energy)
+    energy = (e2, e1, e0, eb)
+    total_i, d_lo, d_hi, valid = apply_energy_mask(
+        total_i, d_lo, d_hi, valid, energy
+    )
+    total_f = total_i.astype(c2.dtype)
+    feasible, tau_star, tau_r, d_r, _ = _relaxed_energy_batched(
+        c2, c1, c0, T, e2, e1, e0, eb, total_f, d_lo, d_hi,
+        tol=tol, max_iter=max_iter,
+    )
+    tau, d, feasible, rounds = _integerize_and_repair(
+        d_r, feasible, c2, c1, c0, T, total_i, d_lo, d_hi, valid,
+        max_rounds=max_rounds, energy=energy,
+    )
+    return dict(
+        tau=tau, d=d, feasible=feasible,
+        relaxed_tau=tau_r, relaxed_d=d_r, tau_star=tau_star, sai_rounds=rounds,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tol", "max_iter", "max_rounds")
+)
+def _solve_energy_batched_impl(c2, c1, c0, T, total_i, d_lo, d_hi, valid,
+                               energy, *, tol, max_iter, max_rounds):
+    return _kkt_energy_core(
+        c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy,
+        tol=tol, max_iter=max_iter, max_rounds=max_rounds,
     )
 
 
@@ -557,6 +804,19 @@ def _kkt_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *, tol, max_iter,
     return out["tau"], out["d"], out["feasible"]
 
 
+def _kkt_energy_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy, *,
+                       tol, max_iter, max_rounds):
+    """The ``kkt_energy`` traced policy: the standard 8-arg policy
+    signature plus a 9th traced argument — the ``(e2, e1, e0, eb)`` tuple
+    of (B, K) energy rows (traced data, NOT baked into the closure, so
+    one cached callable serves every budget)."""
+    out = _kkt_energy_core(
+        c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy,
+        tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+    )
+    return out["tau"], out["d"], out["feasible"]
+
+
 def _eta_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid):
     lo_i = jnp.round(d_lo).astype(total_i.dtype)
     hi_i = jnp.round(d_hi).astype(total_i.dtype)
@@ -590,7 +850,7 @@ def _pgd_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *, steps,
 
 
 #: schemes with a traced in-scan policy (see ``batched_policy``)
-TRACED_POLICIES = ("kkt_sai", "eta", "pgd")
+TRACED_POLICIES = ("kkt_sai", "eta", "pgd", "kkt_energy")
 
 
 @functools.lru_cache(maxsize=None)
@@ -610,9 +870,13 @@ def batched_policy(
     Parameters
     ----------
     name : one of ``TRACED_POLICIES``: ``"kkt_sai"`` (the paper's
-        water-filling + SAI pipeline), ``"eta"`` (equal-task baseline) or
+        water-filling + SAI pipeline), ``"eta"`` (equal-task baseline),
         ``"pgd"`` (relaxed projected-gradient + the same integerize/SAI
-        tail).
+        tail) or ``"kkt_energy"`` (the budgeted pipeline of arXiv
+        2012.00143 — same signature plus a 9th traced argument, the
+        ``(e2, e1, e0, e_budget)`` tuple of (B, K) energy rows; with
+        ``e_budget = +inf`` it reproduces ``kkt_sai`` decision for
+        decision).
     tol, max_iter : bisection stop criteria (kkt_sai).
     max_rounds : SAI repair bound (kkt_sai, pgd).
     use_pallas, interpret : route bisection residuals through the Pallas
@@ -647,6 +911,17 @@ def batched_policy(
         return functools.partial(
             _pgd_policy, steps=pgd_steps, max_rounds=max_rounds,
         )
+    if name == "kkt_energy":
+        if use_pallas:
+            raise ValueError(
+                "kkt_energy's budgeted residual is jnp-reference only; "
+                "there is no Pallas kernel for it yet — pass "
+                "use_pallas=False"
+            )
+        return functools.partial(
+            _kkt_energy_policy, tol=tol, max_iter=max_iter,
+            max_rounds=max_rounds,
+        )
     raise ValueError(
         f"no batched/traced policy for scheme {name!r}; "
         f"choose from {' | '.join(TRACED_POLICIES)}"
@@ -673,6 +948,50 @@ def solve_eta_batched(problems, *, x64: bool = True) -> BatchedAllocation:
     return BatchedAllocation(
         tau=tau.astype(np.int64), d=d.astype(np.int64), feasible=ok,
         valid=np.asarray(bp.valid, bool), method="eta_batched",
+    )
+
+
+def solve_energy_batched(
+    problems,
+    *,
+    x64: bool = True,
+    tol: float = 1e-10,
+    max_iter: int = 200,
+    max_rounds: int = 10_000,
+) -> BatchedAllocation:
+    """Solve B energy-budgeted problems (arXiv 2012.00143) with the
+    ``kkt_energy`` pipeline as one jitted XLA program. Problems without an
+    energy model get zero-coefficient rows and infinite budgets, under
+    which the decisions coincide with ``solve_kkt_batched``; with budgets,
+    every returned allocation satisfies ``E_k(tau, d) <= e_budget_k`` by
+    construction (learners whose budget cannot cover ``d_lower`` are
+    degraded to the padded-slot semantics, like offline learners)."""
+    bp = _as_batched(problems)
+    e2, e1, e0, eb = bp.energy_rows()
+    fdt = np.float64 if x64 else np.float32
+    idt = np.int64 if x64 else np.int32
+    ctx = enable_x64() if x64 else contextlib.nullcontext()
+    with ctx:
+        out = _solve_energy_batched_impl(
+            jnp.asarray(bp.c2, fdt), jnp.asarray(bp.c1, fdt),
+            jnp.asarray(bp.c0, fdt), jnp.asarray(bp.T, fdt),
+            jnp.asarray(bp.total, idt),
+            jnp.asarray(bp.d_lo, fdt), jnp.asarray(bp.d_hi, fdt),
+            jnp.asarray(bp.valid),
+            (jnp.asarray(e2, fdt), jnp.asarray(e1, fdt),
+             jnp.asarray(e0, fdt), jnp.asarray(eb, fdt)),
+            tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+        )
+        out = {k: np.asarray(v) for k, v in out.items()}
+    return BatchedAllocation(
+        tau=out["tau"].astype(np.int64),
+        d=out["d"].astype(np.int64),
+        feasible=out["feasible"],
+        valid=np.asarray(bp.valid, bool),
+        method="kkt_energy_batched",
+        relaxed_tau=out["relaxed_tau"],
+        relaxed_d=out["relaxed_d"],
+        tau_star=out["tau_star"],
     )
 
 

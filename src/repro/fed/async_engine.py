@@ -58,13 +58,13 @@ device work is pure tensor compute:
     close the arrival times are.
   * ``run_bucketed`` — the legacy fixed-grid fast path: completion times
     quantized onto a ``num_buckets`` uniform grid, same scan body. Exact
-    only when the grid resolves individual arrivals
-    (``suggest_num_buckets``, whose bucket count blows up as 1/min-gap on
-    near-tie schedules); ``strict=False`` merges colliding fedasync
-    arrivals via sequentially-composed weights (aggregation exact,
-    mid-bucket redispatch approximated), and buffered flushes that
-    straddle a bucket boundary raise. Kept for grid-vs-jagged
-    benchmarking; new callers should use ``run_events``.
+    only when the grid resolves every arrival into its own bucket (the
+    required bucket count blows up as 1/min-gap on near-tie schedules);
+    ``strict=False`` merges colliding fedasync arrivals via
+    sequentially-composed weights (aggregation exact, mid-bucket
+    redispatch approximated), and buffered flushes that straddle a
+    bucket boundary raise. Kept for grid-vs-jagged benchmarking; new
+    callers should use ``run_events``.
 
 Capacity drift composes with both paths through the schedule: exogenous
 ``CapacityDrift`` rows are materialized per block, and a state-coupled
@@ -248,6 +248,7 @@ class _Arrival:
     dispatch_t: float
     dispatch_version: int
     staleness: int           # server_version - dispatch_version at arrival
+    energy: float = 0.0      # joules the dispatch cost (0 without a model)
     version_after: int = 0
     flush: bool = False      # this arrival closes a flush
     timer_flush: bool = False  # the flush fired on a quorum timer, AFTER
@@ -267,6 +268,10 @@ class _Schedule:
     d_cap: int               # max d over arrivals (>= 1)
     max_tau: int             # max tau over arrivals (>= 1)
     counters: dict = dataclasses.field(default_factory=dict)
+    # per-learner joules spent over ALL dispatches (including dropped /
+    # deadline-cancelled ones — the device burned the energy either way)
+    energy_spent: np.ndarray | None = None
+    energy_violations: int = 0   # dispatches costing more than e_budget
 
 
 FAULT_COUNTERS = (
@@ -394,6 +399,13 @@ class AsyncFedEngine:
         self._block_masks: np.ndarray | None = None
         # fault/churn tallies of the LAST schedule built by a run method
         self.fault_counters: dict = _zero_fault_counters()
+        # per-learner joule ledger of the LAST run (all-zero without an
+        # EnergyModel on the problem): total joules spent per learner and
+        # the count of dispatches that overran their e_budget — zero by
+        # construction under scheme="kkt_energy"
+        self.energy_ledger: dict = {
+            "per_learner": np.zeros(k), "violations": 0,
+        }
 
     # -- capacities & allocation --------------------------------------------
     def _block_rows(self, nblocks: int):
@@ -500,6 +512,12 @@ class AsyncFedEngine:
         frng = (np.random.default_rng(int(self.rng.integers(2**31)))
                 if cfg.has_faults else None)
         counters = _zero_fault_counters()
+        # energy accounting: joules are charged at DISPATCH (the device
+        # burns them whether or not the upload survives transit), against
+        # the problem's static per-learner budget rows
+        e_rows = prob.energy_rows()
+        energy_spent = np.zeros(k_fleet)
+        energy_violations = 0
         heap: list = []
         seq = 0
         server_version = 0
@@ -517,7 +535,7 @@ class AsyncFedEngine:
             seq += 1
 
         def dispatch(k: int, t: float, attempt: int = 0) -> None:
-            nonlocal next_did
+            nonlocal next_did, energy_violations
             block = min(int(t // T), nblocks - 1)
             if masks is not None:
                 # an offline learner cannot accept a task: defer the
@@ -549,6 +567,13 @@ class AsyncFedEngine:
             c2, c1, c0 = (r[block, k] for r in rows)
             cost = float(c2 * tau_k * d_k + c1 * d_k + c0)
             counters["dispatches"] += 1
+            energy_j = 0.0
+            if e_rows is not None:
+                e2k, e1k, e0k, ebk = (row[k] for row in e_rows)
+                energy_j = float(e2k * tau_k * d_k + e1k * d_k + e0k)
+                energy_spent[k] += energy_j
+                if energy_j > ebk * (1 + 1e-9):
+                    energy_violations += 1
             dropped = False
             if frng is not None:
                 # fixed per-dispatch draw order: straggle -> delay -> drop
@@ -569,7 +594,8 @@ class AsyncFedEngine:
                 counters["drops"] += 1
             else:
                 push(t + cost, _EV_ARRIVE,
-                     (did, k, t, server_version, tau_k, d_k, idx, attempt))
+                     (did, k, t, server_version, tau_k, d_k, idx, attempt,
+                      energy_j))
             if cfg.deadline > 0:
                 push(t + cfg.deadline, _EV_DEADLINE, (did, k, attempt))
 
@@ -641,7 +667,7 @@ class AsyncFedEngine:
                     counters["quorum_degradations"] += 1
                     close_group(t_e, timer=True)
                 continue
-            did, k, t_disp, v_disp, tau_k, d_k, idx, attempt = payload
+            did, k, t_disp, v_disp, tau_k, d_k, idx, attempt, e_j = payload
             if dstate.get(did) == "cancelled":
                 counters["late_discards"] += 1
                 continue   # its deadline already fired and retried
@@ -649,7 +675,7 @@ class AsyncFedEngine:
             a = _Arrival(
                 seq=len(arrivals), learner=k, t=t_e, tau=tau_k, d=d_k,
                 idx=idx, dispatch_t=t_disp, dispatch_version=v_disp,
-                staleness=server_version - v_disp,
+                staleness=server_version - v_disp, energy=e_j,
             )
             group.append(a)
             arrivals.append(a)
@@ -686,60 +712,8 @@ class AsyncFedEngine:
             d_cap=max([a.d for a in arrivals], default=1),
             max_tau=max([a.tau for a in arrivals] + [1]),
             counters=counters,
+            energy_spent=energy_spent, energy_violations=energy_violations,
         )
-
-    def suggest_num_buckets(
-        self, train: Dataset, horizon: float, *,
-        max_events: int = 100_000, cap: int = 4096,
-    ) -> int:
-        """Smallest grid that resolves every arrival into its own bucket
-        (the exact-replay regime of the legacy fixed-grid
-        ``run_bucketed``), found by replaying the schedule on a CLONED rng
-        so the engine's own stream is untouched.
-
-        .. deprecated:: use ``run_events`` instead — the event-indexed
-           (jagged) path needs no grid and replays EVERY schedule exactly,
-           including the near-tie and exactly-tying completion times this
-           helper must reject (its bucket count scales with 1/min-gap,
-           and a KKT allocator equalizes finish times by design). This
-           helper remains for grid-vs-jagged benchmarking only and emits
-           a ``DeprecationWarning``.
-
-        Raises when the schedule ties exactly (no grid separates the
-        arrivals) or when resolving it needs more than ``cap`` buckets —
-        in both regimes ``run_events`` is the exact path."""
-        import copy
-        import warnings
-
-        warnings.warn(
-            "suggest_num_buckets serves the legacy fixed-grid run_bucketed;"
-            " run_events needs no grid and is exact on every schedule "
-            "(including tied/near-tie arrivals)",
-            DeprecationWarning, stacklevel=2,
-        )
-        rng = copy.deepcopy(self.rng)
-        part = FederatedPartitioner(train, seed=int(rng.integers(2**31)))
-        sched = self._build_schedule(part, horizon, max_events)
-        # never-flushed trailing arrivals are excluded from the grid by
-        # run_bucketed, so they must not constrain it here either
-        ts = sorted(a.t for a in sched.arrivals if a.flush_id >= 0)
-        if any(b == a for a, b in zip(ts, ts[1:])):
-            raise ValueError(
-                "arrival times tie EXACTLY (homogeneous capacities): no "
-                "grid resolves them into distinct buckets; use run_events "
-                "— event-indexed segments replay tied schedules exactly"
-            )
-        gaps = [b - a for a, b in zip(ts, ts[1:])]
-        if not gaps:
-            return min(max(len(ts), 1), cap)
-        need = int(np.ceil(horizon / min(gaps))) + 1
-        if need > cap:
-            raise ValueError(
-                f"resolving all arrivals needs {need} buckets (> cap={cap}): "
-                "completion times nearly tie; use run_events (exact, "
-                "grid-free) instead of widening the grid"
-            )
-        return need
 
     # -- shared pieces -------------------------------------------------------
     def _eval_pair(self, eval_fn, eval_batch):
@@ -765,6 +739,7 @@ class AsyncFedEngine:
             "version_staleness_mean": float(np.mean(ss)),
             "weights": np.asarray(ev.group_weights, np.float64),
             "keep": ev.keep,
+            "energy": np.array([g.energy for g in group], np.float64),
         }
 
     # -- eager event loop ----------------------------------------------------
@@ -801,6 +776,10 @@ class AsyncFedEngine:
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
         self.fault_counters = sched.counters
+        self.energy_ledger = {
+            "per_learner": sched.energy_spent,
+            "violations": sched.energy_violations,
+        }
         evalj, ex, ey = self._eval_pair(eval_fn, eval_batch)
 
         k_fleet = self.problem.num_learners
@@ -869,6 +848,9 @@ class AsyncFedEngine:
             cycles = int(np.floor(horizon / prob.T + 1e-9))
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         self.fault_counters = _zero_fault_counters()   # barrier is fault-free
+        e_rows = prob.energy_rows()
+        energy_spent = np.zeros(prob.num_learners)
+        energy_violations = 0
         evalj, ex, ey = self._eval_pair(eval_fn, eval_batch)
         # without drift, per-cycle re-solves would repeat the static solve
         rows = (self._block_rows(cycles)
@@ -896,6 +878,13 @@ class AsyncFedEngine:
             # discount is exactly 1.0 for every learner and the weights
             # reduce to the orchestrator's (bitwise — no factor applied)
             self.params = aggregate(locals_, jnp.asarray(w))
+            if e_rows is not None:
+                e2r, e1r, e0r, ebr = e_rows
+                e_c = np.where(d > 0, e2r * tau * d + e1r * d + e0r, 0.0)
+                energy_spent += e_c
+                energy_violations += int(np.sum(e_c > ebr * (1 + 1e-9)))
+            else:
+                e_c = np.zeros(prob.num_learners)
             rec = {
                 "event": c,
                 "t": (c + 1) * prob.T,
@@ -909,6 +898,7 @@ class AsyncFedEngine:
                 "version_staleness_mean": 0.0,
                 "weights": np.asarray(w, np.float64),
                 "keep": 0.0,
+                "energy": e_c,
                 "max_staleness": max_staleness(tau),
                 "avg_staleness": avg_staleness(tau),
                 "cycle": c,
@@ -918,6 +908,9 @@ class AsyncFedEngine:
             if evalj is not None:
                 rec["accuracy"] = float(evalj(self.params, ex, ey))
             history.append(rec)
+        self.energy_ledger = {
+            "per_learner": energy_spent, "violations": energy_violations,
+        }
         return history
 
     # -- shared one-XLA-program execution over event groups -------------------
@@ -1070,6 +1063,10 @@ class AsyncFedEngine:
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
         self.fault_counters = sched.counters
+        self.energy_ledger = {
+            "per_learner": sched.energy_spent,
+            "violations": sched.energy_violations,
+        }
         segments = _event_segments(sched.arrivals)
         if not segments:
             return []
@@ -1122,6 +1119,10 @@ class AsyncFedEngine:
         part = FederatedPartitioner(train, seed=int(self.rng.integers(2**31)))
         sched = self._build_schedule(part, horizon, max_events)
         self.fault_counters = sched.counters
+        self.energy_ledger = {
+            "per_learner": sched.energy_spent,
+            "violations": sched.energy_violations,
+        }
 
         h = num_buckets
         width = horizon / h
@@ -1273,7 +1274,8 @@ def _bucketed_events(server, disp, accum, xs, ys, ms, taus, wcs, keeps, fs,
 
 
 def summarize_async_history(history: list[dict], *,
-                            counters: dict | None = None) -> dict:
+                            counters: dict | None = None,
+                            energy: dict | None = None) -> dict:
     """Fleet-level summary of an async run: the version-staleness profile
     (mean/max AND p50/p90/p99 quantiles) over all aggregated uploads,
     aggregation counts, the virtual time span, and — under ``counters``
@@ -1282,10 +1284,25 @@ def summarize_async_history(history: list[dict], *,
     ``faults`` dict always carries every ``FAULT_COUNTERS`` key so
     consumers need no presence checks; without ``counters`` it is all
     zeros. Barrier (cycle) rows carry zero version staleness by
-    construction."""
+    construction.
+
+    The ``energy`` section summarizes the joule ledger: per-upload
+    dispatch energies from the history rows (total, p50/p99), plus —
+    under ``energy`` (pass ``engine.energy_ledger``) — the engine's
+    per-learner joule totals over ALL dispatches (aggregated or not) and
+    the count of dispatches that overran their ``e_budget``. The
+    violation count is zero by construction under ``scheme="kkt_energy"``
+    (the policy caps every (tau, d) inside the budget); an energy-blind
+    scheme under finite budgets reports its overruns here. All keys are
+    always present (zeros without an ``EnergyModel``)."""
     stal: list[int] = []
+    joules: list[float] = []
     for rec in history:
         stal.extend(rec.get("staleness_list", [0] * len(rec["learners"])))
+        joules.extend(np.atleast_1d(rec.get("energy", [])).tolist())
+    jarr = np.asarray(joules, np.float64)
+    ledger = energy or {}
+    per_learner = ledger.get("per_learner")
     return {
         "aggregations": len(history),
         "uploads": int(sum(len(r["learners"]) for r in history)),
@@ -1293,4 +1310,12 @@ def summarize_async_history(history: list[dict], *,
         "staleness": version_staleness_profile(np.asarray(stal)),
         "final_accuracy": history[-1].get("accuracy") if history else None,
         "faults": {**_zero_fault_counters(), **(counters or {})},
+        "energy": {
+            "joules_total": float(jarr.sum()) if jarr.size else 0.0,
+            "joules_p50": float(np.percentile(jarr, 50)) if jarr.size else 0.0,
+            "joules_p99": float(np.percentile(jarr, 99)) if jarr.size else 0.0,
+            "per_learner": (np.asarray(per_learner, np.float64)
+                            if per_learner is not None else None),
+            "violations": int(ledger.get("violations", 0)),
+        },
     }

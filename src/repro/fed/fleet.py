@@ -64,7 +64,7 @@ from repro.core.solver_batched import (
 )
 from repro.core.staleness import STALENESS_FNS, staleness_factor
 from repro.data.pipeline import Dataset, FederatedPartitioner
-from repro.fed.orchestrator import _weights_traced, local_train
+from repro.fed.orchestrator import ENERGY_SCHEMES, _weights_traced, local_train
 from repro.launch.mesh import host_mesh
 from repro.sharding.rules import fleet_partition_axes
 
@@ -178,27 +178,32 @@ def _wsum(leaf, w):
 @functools.partial(
     jax.jit, static_argnames=("scheme", "mesh", "fleet_axes"),
 )
-def _fleet_solve(c2, c1, c0, T, total, d_lo, d_hi, valid, sampled, *,
+def _fleet_solve(c2, c1, c0, T, total, d_lo, d_hi, valid, sampled, *en,
                  scheme: str, mesh, fleet_axes):
     """ONE ``batched_policy`` call for every fleet's (tau, d), sharded over
     the fleet axis under ``shard_map``; sampled-out fleets get the padded
     -slot projection and solve to zeros. Run under ``enable_x64`` with f64
-    rows for exact integer allocations."""
+    rows for exact integer allocations. Energy-aware schemes take four
+    trailing (F, K) rows — ``(e2, e1, e0, e_budget)`` — sharded like the
+    other per-learner tensors."""
     policy = batched_policy(scheme)
 
-    def body(c2, c1, c0, T, total, d_lo, d_hi, valid, sampled):
+    def body(c2, c1, c0, T, total, d_lo, d_hi, valid, sampled, *en):
         tot_m, lo_m, hi_m, valid_m = apply_sampling_mask(
             total, d_lo, d_hi, valid, sampled
         )
+        if en:
+            return policy(c2, c1, c0, T, tot_m, lo_m, hi_m, valid_m, en)
         return policy(c2, c1, c0, T, tot_m, lo_m, hi_m, valid_m)
 
     row = _fleet_spec(fleet_axes, extra=1)
     vec = _fleet_spec(fleet_axes)
     return compat.shard_map(
         body, mesh=mesh,
-        in_specs=(row, row, row, vec, vec, row, row, row, vec),
+        in_specs=(row, row, row, vec, vec, row, row, row, vec)
+        + (row,) * len(en),
         out_specs=(row, row, vec),
-    )(c2, c1, c0, T, total, d_lo, d_hi, valid, sampled)
+    )(c2, c1, c0, T, total, d_lo, d_hi, valid, sampled, *en)
 
 
 @functools.partial(
@@ -207,7 +212,7 @@ def _fleet_solve(c2, c1, c0, T, total, d_lo, d_hi, valid, sampled, *,
                      "scheme", "mesh", "fleet_axes"),
 )
 def _fleet_round(g, fleet_params, x, y, m, tau, d, base_w, sampled, mix, lr,
-                 gamma, c2, c1, c0, T, total, d_lo, d_hi, valid, ex, ey, *,
+                 gamma, c2, c1, c0, T, total, d_lo, d_hi, valid, ex, ey, *en,
                  max_tau: int, loss_fn, eval_fn, aggregation: str,
                  scheme: str, mesh, fleet_axes):
     """One global round as one XLA program (see module docstring): vmapped
@@ -224,7 +229,7 @@ def _fleet_round(g, fleet_params, x, y, m, tau, d, base_w, sampled, mix, lr,
 
     def body(g, fleet_params, x, y, m, tau, d, base_w, sampled,
              mix, lr, gamma, c2, c1, c0, T, total, d_lo, d_hi, valid,
-             ex, ey):
+             ex, ey, *en):
         # -- tier 1: each fleet trains its K learners and aggregates ------
         def fleet_step(fp, xf, yf, mf, tf, df):
             locals_ = local_train(
@@ -260,7 +265,12 @@ def _fleet_round(g, fleet_params, x, y, m, tau, d, base_w, sampled, mix, lr,
         tot_m, lo_m, hi_m, valid_m = apply_sampling_mask(
             total, d_lo, d_hi, valid, sampled
         )
-        tau_n, d_n, feas = policy(c2, c1, c0, T, tot_m, lo_m, hi_m, valid_m)
+        if en:
+            tau_n, d_n, feas = policy(
+                c2, c1, c0, T, tot_m, lo_m, hi_m, valid_m, en
+            )
+        else:
+            tau_n, d_n, feas = policy(c2, c1, c0, T, tot_m, lo_m, hi_m, valid_m)
         tau_out = jnp.where(sampled[:, None], tau_n, tau)
         d_out = jnp.where(sampled[:, None], d_n, d)
 
@@ -285,12 +295,12 @@ def _fleet_round(g, fleet_params, x, y, m, tau, d, base_w, sampled, mix, lr,
         rep, rep, rep,                                    # mix, lr, gamma
         row, row, row, vec, vec, row, row, row,           # problem tensors
         rep, rep,                                         # eval batch
-    )
+    ) + (row,) * len(en)                                  # energy rows
     out_specs = (g_specs, fp_specs, row, row, vec, rep)
     return compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
     )(g, fleet_params, x, y, m, tau, d, base_w, sampled, mix, lr, gamma,
-      c2, c1, c0, T, total, d_lo, d_hi, valid, ex, ey)
+      c2, c1, c0, T, total, d_lo, d_hi, valid, ex, ey, *en)
 
 
 class FleetEngine:
@@ -342,11 +352,20 @@ class FleetEngine:
              np.full((f_pad - f,) + np.asarray(a).shape[1:], fill,
                      np.asarray(a).dtype)]
         )
+        energy = {}
+        if bp.has_energy:
+            # padded fleets are free: zero coefficients, infinite budget
+            k = np.asarray(bp.c2).shape[1]
+            e2, e1, e0, eb = bp.energy_rows()
+            energy = dict(
+                e2=pad(e2, 0.0), e1=pad(e1, 0.0), e0=pad(e0, 0.0),
+                e_budget=pad(np.broadcast_to(eb, (f, k)), np.inf),
+            )
         return BatchedProblems(
             c2=pad(bp.c2, 1.0), c1=pad(bp.c1, 1.0), c0=pad(bp.c0, 0.0),
             T=pad(bp.T, 1.0), total=pad(bp.total, 0),
             d_lo=pad(bp.d_lo, 0.0), d_hi=pad(bp.d_hi, 0.0),
-            valid=pad(bp.valid, False),
+            valid=pad(bp.valid, False), **energy,
         )
 
     # -- allocation ---------------------------------------------------------
@@ -361,12 +380,24 @@ class FleetEngine:
             jnp.asarray(bp.valid),
         )
 
+    def _energy_args(self) -> tuple:
+        """Trailing ``(e2, e1, e0, e_budget)`` policy rows — only for
+        energy-aware schemes (problems without an energy model get zero
+        coefficients and infinite budgets, reproducing ``kkt_sai``)."""
+        if self.cfg.scheme not in ENERGY_SCHEMES:
+            return ()
+        f_pad, k = np.asarray(self.problems.c2).shape
+        rows = self.problems.energy_rows()
+        e2, e1, e0, eb = (np.broadcast_to(r, (f_pad, k)) for r in rows)
+        return tuple(jnp.asarray(r, jnp.float64) for r in (e2, e1, e0, eb))
+
     def _solve(self, sampled: np.ndarray):
         """(tau, d) int64 host arrays for the sampled fleets (zeros in the
         rest) — one sharded batched_policy call."""
         with enable_x64():
             tau, d, feas = _fleet_solve(
                 *self._solve_args(), jnp.asarray(sampled, bool),
+                *self._energy_args(),
                 scheme=self.cfg.scheme, mesh=self.mesh,
                 fleet_axes=self.fleet_axes,
             )
@@ -460,7 +491,7 @@ class FleetEngine:
                     jnp.asarray(cfg.server_mix, jnp.float32),
                     jnp.asarray(cfg.lr, jnp.float32),
                     jnp.asarray(cfg.staleness_gamma, jnp.float64),
-                    *self._solve_args(), ex, ey,
+                    *self._solve_args(), ex, ey, *self._energy_args(),
                     max_tau=max_tau, loss_fn=self.loss_fn, eval_fn=eval_fn,
                     aggregation=cfg.aggregation, scheme=cfg.scheme,
                     mesh=self.mesh, fleet_axes=self.fleet_axes,

@@ -68,6 +68,7 @@ from repro.core import (
     TRACED_POLICIES,
     fedavg_weights,
     solve_eta,
+    solve_kkt_energy,
     solve_kkt_sai,
     solve_pgd_jax,
     solve_slsqp,
@@ -84,11 +85,15 @@ __all__ = ["MELConfig", "Orchestrator", "local_train", "local_train_stacked"]
 
 SCHEMES: dict[str, Callable[[AllocationProblem], Allocation]] = {
     "kkt_sai": solve_kkt_sai,
+    "kkt_energy": solve_kkt_energy,
     "slsqp": solve_slsqp,
     "pgd": solve_pgd_jax,
     "eta": solve_eta,
     "sync": solve_synchronous,
 }
+
+# schemes whose traced policy takes the extra (e2, e1, e0, e_budget) operand
+ENERGY_SCHEMES = frozenset({"kkt_energy"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,6 +245,26 @@ def policy_problem_args(prob: AllocationProblem):
     )
 
 
+def policy_energy_args(prob: AllocationProblem):
+    """Static (1, K) f64 energy rows ``(e2, e1, e0, e_budget)`` for the
+    ``kkt_energy`` traced policy — the problem's attached
+    ``EnergyModel``/budget, or the zero-coefficient / infinite-budget
+    defaults (under which the policy is decision-identical to
+    ``kkt_sai``) when none is attached."""
+    rows = prob.energy_rows()
+    if rows is None:
+        k = prob.num_learners
+        z = np.zeros((1, k), np.float64)
+        return z, z.copy(), z.copy(), np.full((1, k), np.inf)
+    e2, e1, e0, eb = rows
+    return (
+        np.asarray(e2, np.float64)[None],
+        np.asarray(e1, np.float64)[None],
+        np.asarray(e0, np.float64)[None],
+        np.asarray(eb, np.float64)[None],
+    )
+
+
 def require_standalone_rows(drift, *, remedy: str) -> None:
     """THE shared guard for code paths that need standalone capacity rows
     fixed up front: a state-coupled drift (``QueueDrift``) or an
@@ -286,7 +311,7 @@ def coefficient_rows(prob: AllocationProblem, drift: CapacityDrift | None,
 
 
 def solve_policy_row(scheme: str, c2r, c1r, c0r, prob: AllocationProblem,
-                     *, label: str, active=None
+                     *, label: str, active=None, e_budget=None
                      ) -> tuple[np.ndarray, np.ndarray]:
     """One fleet's (tau, d) on a single (K,) capacity row through the
     jitted traced policy, f64 under ``enable_x64`` — THE single-row solve
@@ -299,10 +324,27 @@ def solve_policy_row(scheme: str, c2r, c1r, c0r, prob: AllocationProblem,
     solve: their slots get the ``BatchedProblems`` padded-slot semantics
     and the sample budget is clipped into the live fleet's box
     (``apply_active_mask``), so tau/d budget flows to online learners.
-    An all-offline row short-circuits to zeros without a policy call."""
+    An all-offline row short-circuits to zeros without a policy call.
+
+    ``e_budget`` (optional ``(K,)`` joules, ``kkt_energy`` only) tightens
+    the problem's static per-learner budget with a per-dispatch one —
+    min of the two — so a ``BatteryDrift`` charge state caps what each
+    dispatch may spend."""
     policy = _jitted_policy(scheme)
     T1, total1, lo1, hi1, valid1 = policy_problem_args(prob)
     k = prob.num_learners
+    energy1 = None
+    if scheme in ENERGY_SCHEMES:
+        e2r, e1r, e0r, ebr = policy_energy_args(prob)
+        if e_budget is not None:
+            ebr = np.minimum(ebr, np.asarray(e_budget, np.float64).reshape(1, k))
+        energy1 = (e2r, e1r, e0r, ebr)
+    elif e_budget is not None:
+        raise ValueError(
+            f"e_budget needs an energy-aware scheme "
+            f"({' | '.join(sorted(ENERGY_SCHEMES))}); scheme {scheme!r} "
+            "cannot honor it"
+        )
     if active is not None:
         act = np.asarray(active, bool).reshape(1, k)
         if not act.any():
@@ -317,11 +359,16 @@ def solve_policy_row(scheme: str, c2r, c1r, c0r, prob: AllocationProblem,
             total_j, lo_j, hi_j, valid_j = apply_active_mask(
                 total_j, lo_j, hi_j, valid_j, jnp.asarray(act)
             )
-        tau, d, ok = policy(
+        base_args = (
             jnp.asarray(c2r[None]), jnp.asarray(c1r[None]),
             jnp.asarray(c0r[None]), jnp.asarray(T1), total_j,
             lo_j, hi_j, valid_j,
         )
+        if energy1 is not None:
+            en_j = tuple(jnp.asarray(e) for e in energy1)
+            tau, d, ok = policy(*base_args, en_j)
+        else:
+            tau, d, ok = policy(*base_args)
         tau = np.asarray(tau[0]); d = np.asarray(d[0]); ok = bool(ok[0])
     if not ok:
         sub = (
@@ -378,9 +425,15 @@ def solve_rows_availability(scheme: str, drift, prob: AllocationProblem,
 
     Returns ``((c2s, c1s, c0s), (taus, ds), masks)`` with shapes
     ``(C, K)`` (masks bool) — the per-cycle numerics mirror
-    ``QueueDrift.rollout_iter`` (f64 rows under ``enable_x64``)."""
+    ``QueueDrift.rollout_iter`` (f64 rows under ``enable_x64``).
+
+    When the drift also exposes ``budget_at`` (a :class:`BatteryDrift`)
+    and the scheme is energy-aware, each cycle's solve is additionally
+    capped by the current per-learner charge — no dispatched task can
+    cost more than its battery holds."""
     tm = prob.time_model
     k = tm.num_learners
+    budgeted = scheme in ENERGY_SCHEMES and hasattr(drift, "budget_at")
     c2s = np.empty((cycles, k)); c1s = np.empty((cycles, k))
     c0s = np.empty((cycles, k))
     taus = np.zeros((cycles, k), np.int64)
@@ -396,8 +449,10 @@ def solve_rows_availability(scheme: str, drift, prob: AllocationProblem,
         c2r = tm.c2 / clock
         c1r = tm.c1 / rate
         c0r = tm.c0 / rate
+        e_budget = drift.budget_at(c, k, state) if budgeted else None
         tau, d = solve_policy_row(
             scheme, c2r, c1r, c0r, prob, label=label.format(c), active=mask,
+            e_budget=e_budget,
         )
         state = drift.state_update(c, state, jnp.asarray(tau), jnp.asarray(d))
         masks[c] = mask
@@ -425,8 +480,8 @@ def _weights_traced(tau, d, *, aggregation: str, gamma):
     donate_argnums=(0,),
 )
 def _fused_realloc_cycles(params, state0, xs, ys, c2b, c1b, c0b, T1, total1,
-                          lo1, hi1, valid1, gamma, lr, eval_x, eval_y, *,
-                          d_cap: int, loss_fn, eval_fn, policy,
+                          lo1, hi1, valid1, energy1, gamma, lr, eval_x,
+                          eval_y, *, d_cap: int, loss_fn, eval_fn, policy,
                           aggregation: str, drift, use_pallas: bool,
                           interpret: bool):
     """One XLA program for C global cycles WITH per-cycle reallocation:
@@ -446,6 +501,10 @@ def _fused_realloc_cycles(params, state0, xs, ys, c2b, c1b, c0b, T1, total1,
         state), so no host-precomputed coefficient path enters the
         program; ``drift=None`` runs the static rows as-is
     T1, total1 : (1,); lo1/hi1/valid1 : (1, K) — the policy problem args
+    energy1 : None for an energy-blind ``policy``, else the (1, K) f64
+        ``(e2, e1, e0, e_budget)`` operand the ``kkt_energy`` policy takes
+        (None-ness is pytree structure, so the branch resolves at trace
+        time)
 
     Feasibility is guarded IN-SCAN: a cycle whose capacity state cannot
     absorb the sample budget latches a ``dead`` flag; that cycle and every
@@ -480,9 +539,14 @@ def _fused_realloc_cycles(params, state0, xs, ys, c2b, c1b, c0b, T1, total1,
             c2 = c2b / clock.astype(c2b.dtype)[None]
             c1 = c1b / rate.astype(c1b.dtype)[None]
             c0 = c0b / rate.astype(c0b.dtype)[None]
-        tau_b, d_b, feas_b = policy(
-            c2, c1, c0, T1, total1, lo1, hi1, valid1
-        )
+        if energy1 is None:
+            tau_b, d_b, feas_b = policy(
+                c2, c1, c0, T1, total1, lo1, hi1, valid1
+            )
+        else:
+            tau_b, d_b, feas_b = policy(
+                c2, c1, c0, T1, total1, lo1, hi1, valid1, energy1
+            )
         tau, d, feas = tau_b[0], d_b[0], feas_b[0]
         ok = feas & jnp.logical_not(dead)
 
@@ -826,6 +890,8 @@ class Orchestrator:
         total = prob.total_samples
         feat = train.x.shape[1]
         T1, total1, lo1, hi1, valid1 = self._policy_args()
+        energy1 = (policy_energy_args(prob)
+                   if self.mel.scheme in ENERGY_SCHEMES else None)
         tm = prob.time_model
         c2b = np.asarray(tm.c2[None], np.float64)
         c1b = np.asarray(tm.c1[None], np.float64)
@@ -867,6 +933,8 @@ class Orchestrator:
                 jnp.asarray(c2b), jnp.asarray(c1b), jnp.asarray(c0b),
                 jnp.asarray(T1), jnp.asarray(total1), jnp.asarray(lo1),
                 jnp.asarray(hi1), jnp.asarray(valid1),
+                (tuple(jnp.asarray(e) for e in energy1)
+                 if energy1 is not None else None),
                 jnp.asarray(self.mel.staleness_gamma, jnp.float64),
                 jnp.asarray(self.mel.lr, jnp.float32), ex, ey,
                 d_cap=d_cap, loss_fn=self.loss_fn,

@@ -20,12 +20,14 @@ from repro.core import (
     AllocationProblem,
     BatchedProblems,
     CapacityDrift,
+    EnergyModel,
     TimeModel,
     batched_avg_staleness,
     batched_max_staleness,
     batched_summary,
     indoor_80211_profile,
     mnist_dnn_cost,
+    solve_energy_batched,
     solve_eta_batched,
     solve_kkt_batched,
 )
@@ -42,6 +44,8 @@ __all__ = [
     "run_async_experiment",
     "async_mode_sweep",
     "churn_sweep",
+    "build_energy_problem",
+    "energy_sweep",
     "fleet_scale_sweep",
 ]
 
@@ -92,7 +96,11 @@ def build_spread_problem(
     )
 
 
-_BATCHED_SCHEMES = {"kkt_sai": solve_kkt_batched, "eta": solve_eta_batched}
+_BATCHED_SCHEMES = {
+    "kkt_sai": solve_kkt_batched,
+    "eta": solve_eta_batched,
+    "kkt_energy": solve_energy_batched,
+}
 
 
 def staleness_sweep(ks, T: float, *, schemes=("kkt_sai", "slsqp", "eta"), seed: int = 0,
@@ -450,7 +458,9 @@ def run_async_experiment(
             train, horizon, eval_fn=mlp.accuracy, eval_batch=eval_batch,
             max_events=max_events,
         )
-    summary = summarize_async_history(history, counters=eng.fault_counters)
+    summary = summarize_async_history(
+        history, counters=eng.fault_counters, energy=eng.energy_ledger
+    )
     return {
         "mode": mode,
         "scheme": scheme,
@@ -611,6 +621,123 @@ def churn_sweep(
                 "staleness_p99": s["staleness"]["p99"],
                 "staleness_max": s["staleness"]["max"],
                 "faults": s["faults"],
+            })
+    return rows
+
+
+def build_energy_problem(
+    k: int,
+    T: float,
+    *,
+    total_samples: int = 2000,
+    d_lower_frac: float = 0.25,
+    d_upper_frac: float = 3.0,
+    e_budget=None,
+    seed: int = 0,
+) -> AllocationProblem:
+    """``build_problem`` with the matching per-cycle ``EnergyModel``
+    attached: the same 802.11 profiles and MNIST-DNN constants feed both
+    the time model (Eq. 5) and its energy mirror, so the (tau, d) decision
+    variables carry a joule cost per cycle. ``e_budget=None`` attaches the
+    model for ACCOUNTING only (any scheme may run; ``Allocation.validate``
+    has nothing to enforce); a finite budget makes the problem strict —
+    only energy-aware schemes (``kkt_energy``) can solve it."""
+    cost = mnist_dnn_cost()
+    profiles = indoor_80211_profile(k, seed=seed)
+    tm = TimeModel.build(
+        profiles,
+        model_complexity_flops=cost.flops_per_sample,
+        model_size_bits=cost.model_bits,
+    )
+    em = EnergyModel.build(
+        profiles,
+        model_complexity_flops=cost.flops_per_sample,
+        model_size_bits=cost.model_bits,
+    )
+    d_l = max(1, int(d_lower_frac * total_samples / k))
+    d_u = min(total_samples, int(d_upper_frac * total_samples / k))
+    return AllocationProblem(
+        time_model=tm, T=T, total_samples=total_samples,
+        d_lower=d_l, d_upper=d_u, energy=em, e_budget=e_budget,
+    )
+
+
+def energy_sweep(
+    budget_fracs=(0.5, 0.75, 1.0),
+    *,
+    k: int = 4,
+    T: float = 10.0,
+    cycles: int = 8,
+    mode: str = "fedasync",
+    schemes=("kkt_energy", "kkt_sai", "eta"),
+    total_samples: int = 800,
+    seed: int = 0,
+    train: Dataset | None = None,
+    test: Dataset | None = None,
+) -> list[dict]:
+    """Accuracy-vs-energy frontier: the budgeted KKT allocation against the
+    energy-blind schemes across per-learner battery budgets, at equal
+    virtual time.
+
+    The budget axis is anchored to the fleet's OWN unconstrained spend:
+    the blind ``kkt_sai`` allocation's per-learner cycle energies ``E0``
+    set the scale, and each level dispatches under the uniform budget
+    ``frac * median(E0)`` joules per cycle. ``kkt_energy`` solves WITH the
+    budget (per-dispatch re-solves included — ``reallocate=True`` routes
+    every re-dispatch through the budgeted policy) and must report zero
+    violations by construction; the blind schemes run on the same fleet
+    with the energy model attached for accounting only (a strict budgeted
+    problem would be rejected by ``Allocation.validate`` at solve time),
+    and their overruns are counted EXTERNALLY against the same budget from
+    the per-dispatch joules in the history. Rows report final accuracy,
+    total/percentile joules, and the violation counts — the frontier data
+    for ``benchmarks/energy_bench.py``."""
+    prob_free = build_energy_problem(
+        k, T, total_samples=total_samples, seed=seed
+    )
+    em = prob_free.energy
+    alloc0 = SCHEMES["kkt_sai"](prob_free)
+    e_blind = em.cycle_energy(alloc0.tau, alloc0.d)
+    if train is None or test is None:
+        train, test = synthetic_mnist(max(total_samples * 2, 12_000), seed=seed)
+    rows: list[dict] = []
+    for frac in budget_fracs:
+        eb = float(frac) * float(np.median(e_blind))
+        for scheme in schemes:
+            aware = scheme == "kkt_energy"
+            prob = (dataclasses.replace(prob_free, e_budget=eb)
+                    if aware else prob_free)
+            res = run_async_experiment(
+                mode=mode, cycles=cycles, seed=seed, problem=prob,
+                train=train, test=test, scheme=scheme, reallocate=True,
+                bucketed=(mode != "cycle"),
+            )
+            s = res["summary"]
+            # blind schemes never see the budget: score their dispatches
+            # against it after the fact (the frontier's violation axis)
+            overruns = sum(
+                int((np.atleast_1d(r.get("energy", [])) > eb * (1 + 1e-9)).sum())
+                for r in res["history"]
+            )
+            rows.append({
+                "K": k,
+                "T": T,
+                "mode": mode,
+                "cycles": cycles,
+                "scheme": scheme,
+                "energy_aware": aware,
+                "budget_frac": float(frac),
+                "e_budget_j": round(eb, 4),
+                "final_accuracy": res["final_accuracy"],
+                "aggregations": s["aggregations"],
+                "uploads": s["uploads"],
+                "joules_total": round(s["energy"]["joules_total"], 3),
+                "joules_p50": round(s["energy"]["joules_p50"], 4),
+                "joules_p99": round(s["energy"]["joules_p99"], 4),
+                "violations": int(s["energy"]["violations"]) if aware
+                              else overruns,
+                "staleness_mean": s["staleness"]["mean"],
+                "staleness_max": s["staleness"]["max"],
             })
     return rows
 

@@ -66,13 +66,31 @@ def _tied_problem(k: int = 3) -> AllocationProblem:
 def _near_tie_problem() -> AllocationProblem:
     """A KKT near-tie fleet: capacities differ by ~1e-7 relative, so the
     completion gaps are microscopic and resolving them on a uniform grid
-    needs millions of buckets (``suggest_num_buckets`` raises > cap) —
-    the regime that previously forced ``strict=False`` merging."""
+    needs millions of buckets — the regime that previously forced
+    ``strict=False`` merging."""
     eps = np.array([0.0, 1e-7, 2.3e-7])
     tm = TimeModel(c2=0.04 * (1 + eps), c1=np.full(3, 0.004),
                    c0=np.full(3, 0.4))
     return AllocationProblem(time_model=tm, T=6.0, total_samples=60,
                              d_lower=10, d_upper=40)
+
+
+def _min_grid(cfg, prob, train, horizon, *, seed=2) -> int:
+    """Smallest uniform grid that resolves every kept arrival into its own
+    bucket (the exact-replay regime of the legacy ``run_bucketed``), read
+    off a probe engine's schedule. The probe shares the production
+    engine's seed, so its rng stream — and therefore its schedule — is
+    identical; the production engine's own rng is untouched."""
+    from repro.data.pipeline import FederatedPartitioner
+
+    probe = AsyncFedEngine(cfg, prob, mlp.loss, mlp.init(jax.random.key(1)),
+                           seed=seed)
+    part = FederatedPartitioner(train, seed=int(probe.rng.integers(2**31)))
+    sched = probe._build_schedule(part, horizon, 100_000)
+    ts = sorted(a.t for a in sched.arrivals if a.flush_id >= 0)
+    gaps = [b - a for a, b in zip(ts, ts[1:]) if b > a]
+    assert gaps and len(gaps) == len(ts) - 1, "schedule ties: no exact grid"
+    return int(np.ceil(horizon / min(gaps))) + 1
 
 
 def _run_both(cfg, prob, train, horizon, *, seed=2, drift=None,
@@ -265,8 +283,7 @@ def test_bucketed_matches_eager_fedasync(data):
     h1 = e1.run(train, 18.0, eval_fn=mlp.accuracy,
                 eval_batch=(test.x[:400], test.y[:400]))
     e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
-    with pytest.warns(DeprecationWarning, match="run_events"):
-        nb = e2.suggest_num_buckets(train, 18.0)
+    nb = _min_grid(cfg, prob, train, 18.0)
     h2 = e2.run_bucketed(train, 18.0, nb, eval_fn=mlp.accuracy,
                          eval_batch=(test.x[:400], test.y[:400]))
 
@@ -293,8 +310,7 @@ def test_bucketed_matches_eager_buffered(data):
     e1 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
     h1 = e1.run(train, 18.0)
     e2 = AsyncFedEngine(cfg, prob, mlp.loss, params, seed=2)
-    with pytest.warns(DeprecationWarning, match="run_events"):
-        nb = e2.suggest_num_buckets(train, 18.0)
+    nb = _min_grid(cfg, prob, train, 18.0)
     h2 = e2.run_bucketed(train, 18.0, nb)
     assert [r["learners"] for r in h1] == [r["learners"] for r in h2]
     _assert_trees_equal(e1.params, e2.params, atol=1e-5)
@@ -316,22 +332,6 @@ def test_bucketed_guards(data):
                           mlp.loss, params, seed=2)
     with pytest.raises(ValueError, match="run_fused"):
         ebar.run_bucketed(train, 18.0, 64)
-
-
-def test_suggest_num_buckets_rejects_exact_ties(data):
-    """A homogeneous fleet completes all tasks at bitwise-identical times:
-    no grid separates them, and suggest_num_buckets must say so instead of
-    returning a grid the strict guards can never accept."""
-    train, _ = data
-    tm = TimeModel(c2=np.full(3, 0.04), c1=np.full(3, 0.004),
-                   c0=np.full(3, 0.4))
-    prob = AllocationProblem(time_model=tm, T=6.0, total_samples=60,
-                             d_lower=10, d_upper=40)
-    eng = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
-                         mlp.init(jax.random.key(0)), seed=0)
-    with pytest.warns(DeprecationWarning, match="run_events"):
-        with pytest.raises(ValueError, match="tie EXACTLY"):
-            eng.suggest_num_buckets(train, 12.0)
 
 
 def test_bucketed_strict_false_merges_collisions(data):
@@ -382,17 +382,11 @@ def test_run_events_matches_eager_spread(data):
 
 def test_run_events_exact_on_tied_schedule(data):
     """ACCEPTANCE: a homogeneous fleet completes at bitwise-identical
-    times — the fixed grid rejects the schedule outright
-    (suggest_num_buckets raises, buffered buckets are unrepresentable) —
-    yet the event-indexed path replays the eager loop exactly in BOTH
+    times — no grid separates its arrivals into distinct buckets — yet
+    the event-indexed path replays the eager loop exactly in BOTH
     server modes."""
     train, test = data
     prob = _tied_problem()
-    probe = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
-                           mlp.init(jax.random.key(0)), seed=2)
-    with pytest.warns(DeprecationWarning, match="run_events"):
-        with pytest.raises(ValueError, match="tie EXACTLY"):
-            probe.suggest_num_buckets(train, 12.0)
     for cfg in (AsyncConfig(mode="fedasync", alpha=0.6),
                 AsyncConfig(mode="buffered", buffer_size=2)):
         e1, h1, e2, h2 = _run_both(
@@ -412,11 +406,6 @@ def test_run_events_exact_on_near_tie_kkt(data):
     and weights/versions bitwise, params within float tolerance)."""
     train, test = data
     prob = _near_tie_problem()
-    probe = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
-                           mlp.init(jax.random.key(0)), seed=2)
-    with pytest.warns(DeprecationWarning, match="run_events"):
-        with pytest.raises(ValueError, match="buckets"):
-            probe.suggest_num_buckets(train, 12.0)
     e1, h1, e2, h2 = _run_both(
         AsyncConfig(mode="fedasync", alpha=0.6), prob, train, 12.0,
         eval_fn=mlp.accuracy, eval_batch=(test.x[:400], test.y[:400]),

@@ -239,6 +239,45 @@ def test_solve_rows_availability_joint_rollout():
     assert not masks.all()  # p_drop=0.5 actually churned someone
 
 
+def test_committed_uptime_trace_replays_through_masked_solve():
+    """The committed FLGo-style usage-ping fixture (288 five-minute ticks
+    x 12 clients, bursty sessions under a diurnal envelope) replays
+    bit-exactly through ``TraceAvailability`` and drives the masked-solve
+    path: online sets come from the measured trace, offline clients get
+    tau = d = 0, and the budget redistributes over whoever is up."""
+    import pathlib
+
+    csv = pathlib.Path(__file__).parent / "data" / "uptime_trace.csv"
+    trace = np.loadtxt(csv, delimiter=",", dtype=np.int8).astype(bool)
+    c_tr, k = trace.shape
+    assert (c_tr, k) == (288, 12)
+    # the fixture is bursty, not i.i.d.: multi-tick sessions dominate
+    flips = np.abs(np.diff(trace.astype(int), axis=0)).sum()
+    assert 0 < flips < 0.5 * trace.size
+    assert trace.any(axis=0).all()            # every client pings
+
+    av = TraceAvailability(trace)
+    tm = TimeModel(c2=np.full(k, 0.04), c1=np.full(k, 0.004),
+                   c0=np.full(k, 0.4))
+    prob = AllocationProblem(time_model=tm, T=6.0, total_samples=240,
+                             d_lower=10, d_upper=40)
+    cycles = 36
+    _, (taus, ds), masks = solve_rows_availability(
+        "kkt_sai", av, prob, cycles, label="trace cycle {}"
+    )
+    np.testing.assert_array_equal(masks, trace[:cycles])
+    assert (ds[~masks] == 0).all() and (taus[~masks] == 0).all()
+    for c in range(cycles):
+        n_on = int(masks[c].sum())
+        if n_on:   # live fleet absorbs the (box-clipped) budget
+            assert n_on * prob.d_lower <= ds[c].sum() <= n_on * prob.d_upper
+        else:
+            assert ds[c].sum() == 0
+    # the replay wraps periodically past the measured horizon
+    wrapped = availability_masks(av, k, c_tr + 7)
+    np.testing.assert_array_equal(wrapped[c_tr:], trace[:7])
+
+
 # ---------------------------------------------------------------------------
 # rejection surface
 # ---------------------------------------------------------------------------
