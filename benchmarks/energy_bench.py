@@ -27,9 +27,14 @@ def main(quick: bool = False) -> None:
     budget_fracs = (0.5, 0.75, 1.0) if quick else (0.4, 0.6, 0.8, 1.0, 1.25)
     cycles = 4 if quick else 10
     total = 400 if quick else 1200
+    # full mode adds the second budgeted scheme (energy-aware PGD) to the
+    # frontier; quick/CI keeps the fast analytic trio
+    schemes = (("kkt_energy", "kkt_sai", "eta") if quick
+               else ("kkt_energy", "pgd", "kkt_sai", "eta"))
     t0 = time.time()
     rows = energy_sweep(
         budget_fracs, k=4, T=8.0, cycles=cycles, total_samples=total, seed=0,
+        schemes=schemes,
     )
     elapsed = time.time() - t0
     for r in rows:

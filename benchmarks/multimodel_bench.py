@@ -1,0 +1,65 @@
+"""Multi-tenant scheduler benchmark: deficit-driven cross-model
+allocation vs the equal split (``--only multimodel``).
+
+Runs ``fed.simulation.multi_model_sweep`` — S tenant models time-sharing
+one fleet through ``fed.multimodel.MultiModelEngine``, the heavy LAGGARD
+tenant carrying 3x the per-round samples — under both split policies at
+equal virtual time, and merges the per-model accuracy traces plus the
+laggard time-to-accuracy comparison into ``BENCH_alloc.json`` under the
+``multimodel`` section.
+
+The headline number is the laggard's time-to-accuracy: the deficit split
+must reach the common target no later than the equal split (FedAST-style
+behind-ness steering each learner's time budget toward the tenant that
+trails in server versions). Full mode enforces that invariant; quick/CI
+mode records the rows without the assertion (short horizons make the
+crossing noisy).
+
+  PYTHONPATH=src python -m benchmarks.run --only multimodel
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.alloc_bench import _merge_out
+from repro.fed.simulation import laggard_time_to_accuracy, multi_model_sweep
+
+
+def main(quick: bool = False) -> None:
+    totals = (120, 120, 360) if quick else (200, 200, 600)
+    cycles = 5 if quick else 10
+    t0 = time.time()
+    rows = multi_model_sweep(
+        totals, k=4, T=8.0, cycles=cycles, seed=0,
+        splits=("deficit", "equal"),
+    )
+    elapsed = time.time() - t0
+    tta, target = laggard_time_to_accuracy(rows)
+    for r in rows:
+        print(
+            f"  split={r['split']:<8} versions={r['versions']} "
+            f"acc={r['final_accuracy']} "
+            f"laggard_tta@{round(target, 3)}={tta[r['split']]}"
+        )
+    if not quick:
+        t_def, t_eq = tta.get("deficit"), tta.get("equal")
+        if t_def is None or (t_eq is not None and t_def > t_eq):
+            raise AssertionError(
+                "the deficit split must reach the laggard accuracy target "
+                f"no later than the equal split: deficit={t_def}, "
+                f"equal={t_eq} (target={target})"
+            )
+    _merge_out("multimodel", {
+        "S": rows[0]["S"],
+        "cycles": cycles,
+        "totals": list(totals),
+        "laggard_tta_target": round(target, 4),
+        "laggard_tta": tta,
+        "sweep": rows,
+        "elapsed_s": round(elapsed, 2),
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,9 @@ Sections:
   energy    accuracy-vs-energy frontier: budgeted kkt_energy vs the
             energy-blind schemes across battery budgets (merges into
             BENCH_alloc.json)
+  multimodel multi-tenant scheduler: deficit-driven cross-model allocation
+            vs the equal split on the laggard's time-to-accuracy (merges
+            into BENCH_alloc.json)
   fleet     fleet-of-fleets scale: FleetEngine rounds at 10^4 learners +
             the sharded dispatch solve at 10^6 learners (merges into
             BENCH_alloc.json)
@@ -39,6 +42,7 @@ from benchmarks import (
     energy_bench,
     fleet_scale,
     kernel_bench,
+    multimodel_bench,
     roofline_report,
     solver_table,
     staleness_vs_k,
@@ -52,6 +56,7 @@ SECTIONS = [
     ("async_bench", async_bench.main),
     ("churn_bench", churn_bench.main),
     ("energy_bench", energy_bench.main),
+    ("multimodel_bench", multimodel_bench.main),
     ("fleet_scale", fleet_scale.main),
     ("kernel_bench", kernel_bench.main),
     ("roofline_report", roofline_report.main),

@@ -53,7 +53,11 @@ __all__ = [
     "BatchedProblems",
     "BatchedAllocation",
     "TRACED_POLICIES",
+    "SPLIT_POLICIES",
     "batched_policy",
+    "cross_model_weights",
+    "cross_model_split",
+    "multimodel_policy",
     "solve_kkt_batched",
     "solve_eta_batched",
     "solve_energy_batched",
@@ -380,7 +384,8 @@ def _relaxed_batched(c2, c1, c0, T, total_f, d_lo, d_hi, *, tol, max_iter,
 
 
 def _relaxed_energy_batched(c2, c1, c0, T, e2, e1, e0, eb, total_f, d_lo,
-                            d_hi, *, tol, max_iter):
+                            d_hi, *, tol, max_iter, use_pallas=False,
+                            interpret=False):
     """Energy-budgeted lockstep water-filling (arXiv 2012.00143): the same
     bisection as ``_relaxed_batched`` on the residual
 
@@ -392,13 +397,16 @@ def _relaxed_energy_batched(c2, c1, c0, T, e2, e1, e0, eb, total_f, d_lo,
     constraints. The time branch replicates ``waterfill_residual_ref``'s
     op order exactly, and IEEE inf arithmetic makes ``min(d_time, inf)``
     select the time curve bitwise, so the whole stage degenerates to
-    ``_relaxed_batched`` when no budget binds (eb = +inf). jnp-reference
-    only (no Pallas kernel for the energy residual yet)."""
+    ``_relaxed_batched`` when no budget binds (eb = +inf). Each bisection
+    step is one ``kernels.ops.waterfill_energy_residual`` call — the
+    Pallas TPU kernel behind ``use_pallas=True`` (float32 only)."""
+    from repro.kernels import ops
 
     def resid(tau_star):
-        dt = (T[:, None] - c0) / (c2 * tau_star[:, None] + c1)
-        de = (eb - e0) / (e2 * tau_star[:, None] + e1)
-        return jnp.clip(jnp.minimum(dt, de), d_lo, d_hi).sum(axis=-1) - total_f
+        return ops.waterfill_energy_residual(
+            tau_star, c2, c1, c0, T, e2, e1, e0, eb, d_lo, d_hi, total_f,
+            use_pallas=use_pallas, interpret=interpret,
+        )
 
     b = c2.shape[0]
     zero = jnp.zeros((b,), c2.dtype)
@@ -659,7 +667,8 @@ def apply_energy_mask(total_i, d_lo, d_hi, valid, energy):
 
 
 def _kkt_energy_core(c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy, *,
-                     tol, max_iter, max_rounds):
+                     tol, max_iter, max_rounds, use_pallas=False,
+                     interpret=False):
     """Traced energy-budgeted KKT pipeline (``scheme="kkt_energy"``):
     affordability mask -> budgeted water-filling -> integerize -> SAI with
     energy-capped taus. Every stage keeps ``E_k(tau, d) <= eb_k`` by
@@ -674,7 +683,8 @@ def _kkt_energy_core(c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy, *,
     total_f = total_i.astype(c2.dtype)
     feasible, tau_star, tau_r, d_r, _ = _relaxed_energy_batched(
         c2, c1, c0, T, e2, e1, e0, eb, total_f, d_lo, d_hi,
-        tol=tol, max_iter=max_iter,
+        tol=tol, max_iter=max_iter, use_pallas=use_pallas,
+        interpret=interpret,
     )
     tau, d, feasible, rounds = _integerize_and_repair(
         d_r, feasible, c2, c1, c0, T, total_i, d_lo, d_hi, valid,
@@ -687,13 +697,16 @@ def _kkt_energy_core(c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("tol", "max_iter", "max_rounds")
+    jax.jit,
+    static_argnames=("tol", "max_iter", "max_rounds", "use_pallas", "interpret"),
 )
 def _solve_energy_batched_impl(c2, c1, c0, T, total_i, d_lo, d_hi, valid,
-                               energy, *, tol, max_iter, max_rounds):
+                               energy, *, tol, max_iter, max_rounds,
+                               use_pallas=False, interpret=False):
     return _kkt_energy_core(
         c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy,
         tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+        use_pallas=use_pallas, interpret=interpret,
     )
 
 
@@ -805,7 +818,7 @@ def _kkt_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *, tol, max_iter,
 
 
 def _kkt_energy_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy, *,
-                       tol, max_iter, max_rounds):
+                       tol, max_iter, max_rounds, use_pallas, interpret):
     """The ``kkt_energy`` traced policy: the standard 8-arg policy
     signature plus a 9th traced argument — the ``(e2, e1, e0, eb)`` tuple
     of (B, K) energy rows (traced data, NOT baked into the closure, so
@@ -813,6 +826,7 @@ def _kkt_energy_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy, *,
     out = _kkt_energy_core(
         c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy,
         tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+        use_pallas=use_pallas, interpret=interpret,
     )
     return out["tau"], out["d"], out["feasible"]
 
@@ -824,15 +838,30 @@ def _eta_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid):
     return tau, d, ok
 
 
-def _pgd_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *, steps,
-                max_rounds):
+def _pgd_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy=None, *,
+                steps, max_rounds):
+    """The ``pgd`` traced policy. The optional 9th argument mirrors
+    ``kkt_energy``'s: ``(e2, e1, e0, eb)`` rows project the problem onto
+    the energy-budget box (affordability mask) before the gradient stage
+    and cap every SAI tau by the budget — with ``eb = +inf`` all of it is
+    decision-inert and the energy-blind path is reproduced exactly."""
     from repro.core import solver_numeric
     from repro.kernels import ops
 
+    if energy is not None:
+        energy = tuple(jnp.asarray(x) for x in energy)
+        total_i, d_lo, d_hi, valid = apply_energy_mask(
+            total_i, d_lo, d_hi, valid, energy
+        )
     total_f = total_i.astype(c2.dtype)
-    feasible = ops.waterfill_residual(
-        jnp.zeros_like(T), c2, c1, c0, T, d_lo, d_hi, total_f
-    ) >= -1e-9
+    if energy is None:
+        feasible = ops.waterfill_residual(
+            jnp.zeros_like(T), c2, c1, c0, T, d_lo, d_hi, total_f
+        ) >= -1e-9
+    else:
+        feasible = ops.waterfill_energy_residual(
+            jnp.zeros_like(T), c2, c1, c0, T, *energy, d_lo, d_hi, total_f
+        ) >= -1e-9
     n_valid = jnp.maximum(valid.sum(axis=-1, keepdims=True), 1)
     d0 = jnp.clip(
         jnp.where(valid, total_f[:, None] / n_valid, 0.0), d_lo, d_hi
@@ -844,7 +873,7 @@ def _pgd_policy(c2, c1, c0, T, total_i, d_lo, d_hi, valid, *, steps,
     )(d0, c2, c1, c0, T, d_lo, d_hi, total_f, valid)
     tau, d, feasible, _ = _integerize_and_repair(
         d_r, feasible, c2, c1, c0, T, total_i, d_lo, d_hi, valid,
-        max_rounds=max_rounds,
+        max_rounds=max_rounds, energy=energy,
     )
     return tau, d, feasible
 
@@ -912,15 +941,10 @@ def batched_policy(
             _pgd_policy, steps=pgd_steps, max_rounds=max_rounds,
         )
     if name == "kkt_energy":
-        if use_pallas:
-            raise ValueError(
-                "kkt_energy's budgeted residual is jnp-reference only; "
-                "there is no Pallas kernel for it yet — pass "
-                "use_pallas=False"
-            )
         return functools.partial(
             _kkt_energy_policy, tol=tol, max_iter=max_iter,
-            max_rounds=max_rounds,
+            max_rounds=max_rounds, use_pallas=use_pallas,
+            interpret=interpret,
         )
     raise ValueError(
         f"no batched/traced policy for scheme {name!r}; "
@@ -955,6 +979,8 @@ def solve_energy_batched(
     problems,
     *,
     x64: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = False,
     tol: float = 1e-10,
     max_iter: int = 200,
     max_rounds: int = 10_000,
@@ -965,7 +991,14 @@ def solve_energy_batched(
     which the decisions coincide with ``solve_kkt_batched``; with budgets,
     every returned allocation satisfies ``E_k(tau, d) <= e_budget_k`` by
     construction (learners whose budget cannot cover ``d_lower`` are
-    degraded to the padded-slot semantics, like offline learners)."""
+    degraded to the padded-slot semantics, like offline learners).
+    ``use_pallas=True`` routes every budgeted bisection residual through
+    the Pallas TPU kernel (float32 only — requires ``x64=False``;
+    ``interpret=True`` emulates on CPU)."""
+    if use_pallas and x64:
+        raise ValueError("use_pallas=True computes residuals in float32; "
+                         "pass x64=False (the exact-equivalence path is "
+                         "jnp-reference only)")
     bp = _as_batched(problems)
     e2, e1, e0, eb = bp.energy_rows()
     fdt = np.float64 if x64 else np.float32
@@ -981,6 +1014,7 @@ def solve_energy_batched(
             (jnp.asarray(e2, fdt), jnp.asarray(e1, fdt),
              jnp.asarray(e0, fdt), jnp.asarray(eb, fdt)),
             tol=tol, max_iter=max_iter, max_rounds=max_rounds,
+            use_pallas=use_pallas, interpret=interpret,
         )
         out = {k: np.asarray(v) for k, v in out.items()}
     return BatchedAllocation(
@@ -1035,3 +1069,148 @@ def apply_sampling_mask(total_i, d_lo, d_hi, valid, sampled):
     """
     act = jnp.asarray(sampled, bool)[..., None] & jnp.asarray(valid, bool)
     return apply_active_mask(total_i, d_lo, d_hi, valid, act)
+
+
+# ---------------------------------------------------------------------------
+# cross-model allocation layer (FedAST-style multi-tenant split)
+# ---------------------------------------------------------------------------
+
+#: cross-model budget-split policies (see ``cross_model_weights``)
+SPLIT_POLICIES = ("deficit", "equal")
+
+#: split weights are floored onto this binary grid so their exact sum is a
+#: representable float <= 1.0 — the budget-conservation guarantee cannot be
+#: eaten by rounding in the normalization divides.
+_SPLIT_GRID = float(2**20)
+
+
+def cross_model_weights(deficits, *, policy: str = "deficit",
+                        share_floor: float = 0.0):
+    """Per-model budget-split weights ``w`` of shape (S,) from a (S,)
+    progress-deficit signal (FedAST-style behind-ness: how far each tenant
+    model trails its round target — model-value-free, so the schedule stays
+    bit-reproducible).
+
+    ``policy="deficit"`` splits proportionally to ``max(deficits, 0)``
+    (equal split when all deficits are zero); ``policy="equal"`` is the
+    uniform 1/S baseline. ``share_floor`` mixes a uniform floor in
+    (``w = (1 - S*floor) p + floor``) so no tenant is fully starved;
+    requires ``share_floor * S <= 1``.
+
+    Guarantees, pinned by the multimodel property tests:
+
+    * weights are floored onto a 2^-20 binary grid, so ``w.sum()`` is an
+      EXACTLY-representable float ``<= 1.0`` — per-learner budgets split
+      as ``w_s * T_k`` can never over-commit the pool by more than one
+      product-rounding ULP per model;
+    * S = 1 returns exactly 1.0 (statically — no grid, no arithmetic), so
+      ``w * T == T`` bitwise: the single-tenant engine is a fixed point;
+    * permutation-equivariant across models, and each model's weight is
+      monotone non-decreasing in its own deficit (elementwise normalize +
+      monotone floor).
+    """
+    if policy not in SPLIT_POLICIES:
+        raise ValueError(
+            f"no cross-model split policy {policy!r}; "
+            f"choose from {' | '.join(SPLIT_POLICIES)}"
+        )
+    deficits = jnp.asarray(deficits)
+    s = int(deficits.shape[0])
+    dtype = (deficits.dtype if jnp.issubdtype(deficits.dtype, jnp.floating)
+             else jnp.result_type(float))
+    if s == 1:
+        return jnp.ones((1,), dtype)
+    if share_floor < 0 or share_floor * s > 1.0:
+        raise ValueError(f"share_floor={share_floor} must satisfy "
+                         f"0 <= share_floor * S <= 1 (S={s})")
+    if policy == "equal":
+        p = jnp.full((s,), 1.0 / s, dtype)
+    else:
+        c = jnp.maximum(deficits.astype(dtype), 0.0)
+        tot = c.sum()
+        p = jnp.where(tot > 0, c / jnp.where(tot > 0, tot, 1.0), 1.0 / s)
+    if share_floor > 0.0:
+        p = (1.0 - s * share_floor) * p + share_floor
+    return jnp.floor(p * _SPLIT_GRID) / _SPLIT_GRID
+
+
+def cross_model_split(deficits, T, e_budget=None, *, policy: str = "deficit",
+                      share_floor: float = 0.0):
+    """Split shared budgets across S tenant models: ``(w, T_split,
+    eb_split)`` where ``T_split = w * T`` ((S,) per-model deadlines from a
+    scalar or (S,) shared deadline) and ``eb_split = w[:, None] *
+    e_budget`` ((S, K) per-model per-learner joule budgets; infinite
+    budgets stay infinite rather than going 0 * inf = nan). With
+    ``w.sum() <= 1.0`` exact (see ``cross_model_weights``), each learner's
+    summed time/energy commitment across tenants stays within its single-
+    tenant budget."""
+    w = cross_model_weights(deficits, policy=policy, share_floor=share_floor)
+    T = jnp.asarray(T)
+    w = w.astype(T.dtype)
+    T_split = w * T
+    eb_split = None
+    if e_budget is not None:
+        eb = jnp.asarray(e_budget)
+        eb_split = jnp.where(jnp.isinf(eb), eb, w[:, None] * eb)
+    return w, T_split, eb_split
+
+
+def multimodel_policy(name: str, *, split: str = "deficit",
+                      share_floor: float = 0.0, **policy_kwargs):
+    """The cross-model allocation layer: a traced policy over the (S, K)
+    multi-tenant problem tensor (S models sharing one K-learner pool).
+
+    Every (re)dispatch first splits each learner's deadline ``T`` (and
+    per-learner energy budgets, for ``name="kkt_energy"``) across models
+    with ``cross_model_split`` on the progress-deficit signal, scales each
+    model's per-round sample budget by its share, degrades (model,
+    learner) cells whose share cannot even cover ``d_lo`` at tau = 0 to
+    the padded-slot semantics (``apply_active_mask`` — feasible-or-
+    degraded, like offline learners under churn), then solves all S
+    per-model (tau, d) rows with ONE ``batched_policy(name)`` call on the
+    (S, K) batch.
+
+    Returns a traced callable
+
+        fn(deficits, c2, c1, c0, T, total_i, d_lo, d_hi, valid[, energy])
+        -> (tau, d, feasible, w)
+
+    with ``deficits``: (S,); ``c2/c1/c0/d_lo/d_hi/valid``: (S, K);
+    ``T``: (S,) per-model full deadlines (normally all equal to the shared
+    learner deadline); ``total_i``: (S,) per-model sample budgets;
+    ``energy``: optional (e2, e1, e0, eb) rows of shape (S, K).
+
+    Exactness anchor: S = 1 is a STATIC pass-through — the unit split
+    leaves every input untouched (no mask, no scaling), so the underlying
+    ``batched_policy`` sees bitwise-identical operands and the multi-
+    tenant engine reproduces the single-tenant one record-for-record."""
+    base = batched_policy(name, **policy_kwargs)
+
+    def fn(deficits, c2, c1, c0, T, total_i, d_lo, d_hi, valid, energy=None):
+        s = int(c2.shape[0])
+        if s == 1:
+            w = jnp.ones((1,), jnp.asarray(T).dtype)
+            if energy is None:
+                tau, d, ok = base(c2, c1, c0, T, total_i, d_lo, d_hi, valid)
+            else:
+                tau, d, ok = base(c2, c1, c0, T, total_i, d_lo, d_hi, valid,
+                                  energy)
+            return tau, d, ok, w
+        eb = energy[3] if energy is not None else None
+        w, T_s, eb_s = cross_model_split(
+            deficits, T, eb, policy=split, share_floor=share_floor
+        )
+        total_s = jnp.round(w * total_i.astype(c2.dtype)).astype(total_i.dtype)
+        active = jnp.asarray(valid, bool) & (T_s[:, None] >= c0 + c1 * d_lo)
+        total_s, lo, hi, v = apply_active_mask(
+            total_s, d_lo, d_hi, valid, active
+        )
+        if energy is None:
+            tau, d, ok = base(c2, c1, c0, T_s, total_s, lo, hi, v)
+        else:
+            e2, e1, e0, _ = energy
+            tau, d, ok = base(c2, c1, c0, T_s, total_s, lo, hi, v,
+                              (e2, e1, e0, eb_s))
+        return tau, d, ok, w
+
+    return fn

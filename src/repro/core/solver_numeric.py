@@ -184,14 +184,46 @@ def _pgd_batch_fn(steps: int):
     )
 
 
+def _energy_cap_tau(tau, d, energy):
+    """Cap a relaxed tau row by the budget hyperbola at the final d:
+    ``tau <= (eb - e0 - e1 d)/(e2 d)`` (arXiv 2012.00143). Inert where the
+    budget never binds (e2 = 0 or eb = inf) — ``min(tau, inf)`` is a
+    bitwise no-op — and 0 on zero-d slots like the time path."""
+    e2, e1, e0, eb = energy
+    den = e2 * d
+    tau_e = jnp.where(
+        den > 0, (eb - e0 - e1 * d) / jnp.where(den > 0, den, 1.0), jnp.inf
+    )
+    return jnp.where(d > 0, jnp.maximum(jnp.minimum(tau, tau_e), 0.0), 0.0)
+
+
 def pgd_relaxed_batch(d0, c2, c1, c0, T, d_lo, d_hi, total, *, steps: int = 600,
-                      valid=None):
+                      valid=None, energy=None):
     """Batched relaxed PGD: all args have a leading problem axis B; ``steps``
     is a static compile-time argument. ``valid`` is an optional (B, K) bool
-    mask for padded mixed-K batches (defaults to all-valid)."""
+    mask for padded mixed-K batches (defaults to all-valid).
+
+    ``energy`` — optional ``(e2, e1, e0, eb)`` rows of shape (B, K) — adds
+    the projection onto the energy-budget box: the d box is tightened by
+    the tau = 0 affordability cap (``apply_energy_mask``: unaffordable
+    learners degrade to padded slots, the sample budget clips into the
+    surviving box), the gradient iterations run on the tightened box, and
+    the returned tau is capped by the budget hyperbola at the final d.
+    With ``eb = +inf`` every step is a bitwise no-op, so the energy-blind
+    call sites are unchanged."""
     if valid is None:
         valid = jnp.ones(jnp.shape(d0), bool)
-    return _pgd_batch_fn(steps)(d0, c2, c1, c0, T, d_lo, d_hi, total, valid)
+    if energy is not None:
+        from repro.core.solver_batched import apply_energy_mask
+
+        total, d_lo, d_hi, valid = apply_energy_mask(
+            total, d_lo, d_hi, valid, energy
+        )
+        d0 = jnp.clip(d0, d_lo, d_hi)
+    tau, d = _pgd_batch_fn(steps)(d0, c2, c1, c0, T, d_lo, d_hi, total, valid)
+    if energy is not None:
+        tau = _energy_cap_tau(tau, d, energy)
+    return tau, d
 
 
 def solve_pgd_batched(bp: BatchedProblems, *, steps: int = 600):
@@ -199,22 +231,100 @@ def solve_pgd_batched(bp: BatchedProblems, *, steps: int = 600):
     layout the batched KKT engine consumes, including padded mixed-K
     batches: per-learner ``d_lo``/``d_hi`` bound boxes are honored and the
     ``valid`` mask keeps padded slots (d_lo == d_hi == 0) at exactly zero
-    work, outside the staleness objective. Returns continuous (tau, d) of
-    shape (B, K); padded entries are 0."""
+    work, outside the staleness objective. Structs carrying energy rows
+    solve on the affordability-tightened box with budget-capped taus
+    (see ``pgd_relaxed_batch``). Returns continuous (tau, d) of shape
+    (B, K); padded entries are 0."""
     n_valid = np.maximum(bp.valid.sum(axis=1, keepdims=True), 1)
     d0 = np.where(bp.valid, bp.total[:, None] / n_valid, 0.0)
     d0 = np.clip(d0, bp.d_lo, bp.d_hi).astype(np.float32)
+    energy = None
+    if bp.has_energy:
+        energy = tuple(
+            jnp.asarray(r, jnp.float32) for r in bp.energy_rows()
+        )
     return pgd_relaxed_batch(
         jnp.asarray(d0),
         jnp.asarray(bp.c2, jnp.float32), jnp.asarray(bp.c1, jnp.float32),
         jnp.asarray(bp.c0, jnp.float32), jnp.asarray(bp.T, jnp.float32),
         jnp.asarray(bp.d_lo, jnp.float32), jnp.asarray(bp.d_hi, jnp.float32),
         jnp.asarray(bp.total, jnp.float32),
-        steps=steps, valid=jnp.asarray(bp.valid, bool),
+        steps=steps, valid=jnp.asarray(bp.valid, bool), energy=energy,
     )
 
 
+def _solve_pgd_energy(prob: AllocationProblem, *, steps: int) -> Allocation:
+    """Energy-budgeted PGD: ``solve_energy``'s affordability prelude and
+    energy-capped integer tail around the relaxed PGD stage, so
+    ``scheme="pgd"`` composes with ``EnergyModel`` budgets — every
+    returned (tau, d) satisfies ``E_k <= e_budget_k`` by construction."""
+    from repro.core.solver_kkt import (
+        _energy_rows_or_free,
+        _integerize_d_vec,
+        _sai_energy_np,
+    )
+
+    tm = prob.time_model
+    k = prob.num_learners
+    e2, e1, e0, eb = _energy_rows_or_free(prob)
+    energy = (e2, e1, e0, eb)
+
+    # projection onto the energy-budget box: the tau = 0 cap tightens d_hi,
+    # unaffordable learners degrade to padded slots (solve_energy step 1)
+    lo = np.full(k, float(prob.d_lower))
+    hi = np.full(k, float(prob.d_upper))
+    room = eb - e0
+    with np.errstate(divide="ignore", invalid="ignore"):
+        capf = np.where(
+            e1 > 0, room / np.where(e1 > 0, e1, 1.0),
+            np.where(room >= 0, np.inf, -1.0),
+        )
+    hi_e = np.clip(np.minimum(np.floor(capf), hi), 0.0, hi)
+    affordable = hi_e >= lo
+    lo = np.where(affordable, lo, 0.0)
+    hi = np.where(affordable, hi_e, 0.0)
+    total = int(np.clip(prob.total_samples, lo.sum(), hi.sum()))
+    degraded = (not affordable.all()) or total != prob.total_samples
+
+    n_afford = max(int(affordable.sum()), 1)
+    d0 = np.where(affordable, total / n_afford, 0.0)
+    d0 = np.clip(d0, lo, hi).astype(np.float32)
+    tau_r, d_r = _pgd_run(
+        jnp.asarray(d0),
+        jnp.asarray(tm.c2), jnp.asarray(tm.c1), jnp.asarray(tm.c0),
+        float(prob.T),
+        jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
+        float(total), steps, jnp.asarray(affordable),
+    )
+    tau_r = _energy_cap_tau(
+        tau_r, d_r, tuple(jnp.asarray(r, jnp.float32) for r in energy)
+    )
+    tau_r = np.asarray(tau_r, dtype=float)
+    d_r = np.asarray(d_r, dtype=float)
+
+    lo_i = np.round(lo).astype(np.int64)
+    hi_i = np.round(hi).astype(np.int64)
+    d_int = _integerize_d_vec(d_r, total, lo_i, hi_i)
+    tau, d, it_sai = _sai_energy_np(
+        d_int, tm.c2, tm.c1, tm.c0, prob.T, lo_i, hi_i, affordable, energy,
+        10_000,
+    )
+    alloc = Allocation(
+        tau=tau,
+        d=d,
+        method="pgd_energy_sai",
+        relaxed_tau=tau_r,
+        relaxed_d=d_r,
+        solver_iters=steps + it_sai,
+    )
+    if not degraded:
+        alloc.validate(prob)
+    return alloc
+
+
 def solve_pgd_jax(prob: AllocationProblem, *, steps: int = 600) -> Allocation:
+    if prob.energy is not None:
+        return _solve_pgd_energy(prob, steps=steps)
     tm = prob.time_model
     k = prob.num_learners
     d0 = jnp.full(k, prob.total_samples / k, dtype=jnp.float32)

@@ -123,6 +123,11 @@ __all__ = [
     "summarize_async_history",
 ]
 
+# NOTE: the multi-model scheduler (``fed.multimodel``) replays its per-model
+# schedules through the SAME module-level executors below
+# (``_replay_eager_schedule`` / ``_run_group_program``) — the S = 1
+# record-for-record equivalence is literal code sharing, not re-derivation.
+
 
 @dataclasses.dataclass(frozen=True)
 class AsyncConfig:
@@ -330,6 +335,90 @@ def _event_segments(arrivals: "list[_Arrival]") -> "list[list[_Arrival]]":
     # horizon, so the walk always ends on a flush boundary
     assert not cur
     return segments
+
+
+def _flush_row(ev: _Arrival, group: "list[_Arrival]", mode: str) -> dict:
+    """One history record per server aggregation — shared by every replay
+    path (and by the multi-model engine's per-model histories)."""
+    ss = [g.staleness for g in group]
+    return {
+        "event": ev.flush_id,
+        "t": ev.flush_t,
+        "mode": mode,
+        "server_version": ev.version_after,
+        "learners": [g.learner for g in group],
+        "tau": np.array([g.tau for g in group], np.int64),
+        "d": np.array([g.d for g in group], np.int64),
+        "staleness_list": list(map(int, ss)),
+        "version_staleness_max": int(max(ss)),
+        "version_staleness_mean": float(np.mean(ss)),
+        "weights": np.asarray(ev.group_weights, np.float64),
+        "keep": ev.keep,
+        "energy": np.array([g.energy for g in group], np.float64),
+    }
+
+
+def _replay_eager_schedule(params, sched: _Schedule, train: Dataset, *,
+                           mode: str, lr: float, num_learners: int, loss_fn,
+                           evalj, ex, ey):
+    """The eager event walk over ONE model's schedule: train each arrival's
+    dispatched model, mix/flush per event. Returns ``(params, history)``.
+    Extracted from ``AsyncFedEngine.run`` so the multi-model engine replays
+    each of its per-model schedules through the IDENTICAL executor (their
+    S = 1 record-for-record equivalence is this code sharing)."""
+    feat = train.x.shape[1]
+    dispatch_params = [params] * num_learners
+    pending: list = []          # trained locals of the open buffer group
+    group: list[_Arrival] = []
+    history: list[dict] = []
+    lrj = jnp.asarray(lr, jnp.float32)
+
+    for ev in sched.arrivals:
+        if ev.flush_id < 0:
+            # trailing buffered arrival whose group never flushes
+            # within the horizon: its local model is unobservable, so
+            # skip the training (the redispatch model is the unchanged
+            # server either way)
+            dispatch_params[ev.learner] = params
+            continue
+        # pad to the schedule-wide (d_cap, max_tau) so every event hits
+        # ONE local_train compilation (and the same masked-scan numerics
+        # as the bucketed path)
+        x = np.zeros((1, sched.d_cap, feat), np.float32)
+        y = np.zeros((1, sched.d_cap), np.int32)
+        msk = np.zeros((1, sched.d_cap), np.float32)
+        x[0, : ev.d] = train.x[ev.idx]
+        y[0, : ev.d] = train.y[ev.idx]
+        msk[0, : ev.d] = 1.0
+        out = local_train(
+            dispatch_params[ev.learner], jnp.asarray(x), jnp.asarray(y),
+            jnp.asarray(msk), jnp.asarray([ev.tau], jnp.int32), lrj,
+            max_tau=sched.max_tau, loss_fn=loss_fn,
+        )
+        pending.append(jax.tree_util.tree_map(lambda l: l[0], out))
+        group.append(ev)
+        if ev.flush:
+            if ev.timer_flush:
+                # a quorum timer closed this group AFTER its last
+                # arrival redispatched: the schedule gave that dispatch
+                # the PRE-flush server, so hand it out before flushing
+                dispatch_params[ev.learner] = params
+            models = [params] + pending
+            stacked = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *models
+            )
+            wvec = np.concatenate([[ev.keep], ev.group_weights])
+            params = aggregate(stacked, jnp.asarray(wvec, jnp.float32))
+            rec = _flush_row(ev, group, mode)
+            if evalj is not None:
+                rec["accuracy"] = float(evalj(params, ex, ey))
+            history.append(rec)
+            pending, group = [], []
+            if not ev.timer_flush:
+                dispatch_params[ev.learner] = params
+        else:
+            dispatch_params[ev.learner] = params
+    return params, history
 
 
 class AsyncFedEngine:
@@ -725,22 +814,7 @@ class AsyncFedEngine:
                 jnp.asarray(eval_batch[1]))
 
     def _flush_row(self, ev: _Arrival, group: list[_Arrival]) -> dict:
-        ss = [g.staleness for g in group]
-        return {
-            "event": ev.flush_id,
-            "t": ev.flush_t,
-            "mode": self.cfg.mode,
-            "server_version": ev.version_after,
-            "learners": [g.learner for g in group],
-            "tau": np.array([g.tau for g in group], np.int64),
-            "d": np.array([g.d for g in group], np.int64),
-            "staleness_list": list(map(int, ss)),
-            "version_staleness_max": int(max(ss)),
-            "version_staleness_mean": float(np.mean(ss)),
-            "weights": np.asarray(ev.group_weights, np.float64),
-            "keep": ev.keep,
-            "energy": np.array([g.energy for g in group], np.float64),
-        }
+        return _flush_row(ev, group, self.cfg.mode)
 
     # -- eager event loop ----------------------------------------------------
     def run(
@@ -781,62 +855,11 @@ class AsyncFedEngine:
             "violations": sched.energy_violations,
         }
         evalj, ex, ey = self._eval_pair(eval_fn, eval_batch)
-
-        k_fleet = self.problem.num_learners
-        feat = train.x.shape[1]
-        dispatch_params = [self.params] * k_fleet
-        pending: list = []          # trained locals of the open buffer group
-        group: list[_Arrival] = []
-        history: list[dict] = []
-        lr = jnp.asarray(self.cfg.lr, jnp.float32)
-
-        for ev in sched.arrivals:
-            if ev.flush_id < 0:
-                # trailing buffered arrival whose group never flushes
-                # within the horizon: its local model is unobservable, so
-                # skip the training (the redispatch model is the unchanged
-                # server either way)
-                dispatch_params[ev.learner] = self.params
-                continue
-            # pad to the schedule-wide (d_cap, max_tau) so every event hits
-            # ONE local_train compilation (and the same masked-scan numerics
-            # as the bucketed path)
-            x = np.zeros((1, sched.d_cap, feat), np.float32)
-            y = np.zeros((1, sched.d_cap), np.int32)
-            msk = np.zeros((1, sched.d_cap), np.float32)
-            x[0, : ev.d] = train.x[ev.idx]
-            y[0, : ev.d] = train.y[ev.idx]
-            msk[0, : ev.d] = 1.0
-            out = local_train(
-                dispatch_params[ev.learner], jnp.asarray(x), jnp.asarray(y),
-                jnp.asarray(msk), jnp.asarray([ev.tau], jnp.int32), lr,
-                max_tau=sched.max_tau, loss_fn=self.loss_fn,
-            )
-            pending.append(jax.tree_util.tree_map(lambda l: l[0], out))
-            group.append(ev)
-            if ev.flush:
-                if ev.timer_flush:
-                    # a quorum timer closed this group AFTER its last
-                    # arrival redispatched: the schedule gave that dispatch
-                    # the PRE-flush server, so hand it out before flushing
-                    dispatch_params[ev.learner] = self.params
-                models = [self.params] + pending
-                stacked = jax.tree_util.tree_map(
-                    lambda *ls: jnp.stack(ls), *models
-                )
-                wvec = np.concatenate([[ev.keep], ev.group_weights])
-                self.params = aggregate(
-                    stacked, jnp.asarray(wvec, jnp.float32)
-                )
-                rec = self._flush_row(ev, group)
-                if evalj is not None:
-                    rec["accuracy"] = float(evalj(self.params, ex, ey))
-                history.append(rec)
-                pending, group = [], []
-                if not ev.timer_flush:
-                    dispatch_params[ev.learner] = self.params
-            else:
-                dispatch_params[ev.learner] = self.params
+        self.params, history = _replay_eager_schedule(
+            self.params, sched, train, mode=self.cfg.mode, lr=self.cfg.lr,
+            num_learners=self.problem.num_learners, loss_fn=self.loss_fn,
+            evalj=evalj, ex=ex, ey=ey,
+        )
         return history
 
     # -- barrier (paper-scheme) rounds --------------------------------------
@@ -917,97 +940,14 @@ class AsyncFedEngine:
     def _run_groups(self, groups, sched: _Schedule, train: Dataset, *,
                     eval_fn, eval_batch, use_pallas: bool,
                     interpret: bool) -> list[dict]:
-        """Stage one scan step per event group, run the whole campaign as
-        ONE jitted program (``_bucketed_events``), and replay the history
-        rows — THE shared back half of ``run_events`` (jagged segments)
-        and ``run_bucketed`` (grid buckets), so the two scan paths cannot
-        diverge in staging semantics.
-
-        Empty groups are allowed (empty grid buckets; runtime-skipped scan
-        steps). fedasync groups may hold several arrivals (grid
-        ``strict=False`` merging): their sequential mixes are composed
-        into one contraction — for single-arrival groups (always, on the
-        jagged path) the composition degenerates to the schedule's own
-        per-arrival coefficients bitwise. The post-step accuracy is
-        attributed to the group's LAST flush row (earlier merged flushes
-        have no mid-step eval point)."""
-        if eval_fn is not None and eval_batch is None:
-            raise ValueError("eval_fn needs eval_batch=(x, y)")
-        n = len(groups)
-        k_fleet = self.problem.num_learners
-        feat = train.x.shape[1]
-        d_cap, max_tau = sched.d_cap, sched.max_tau
-        xs = np.zeros((n, k_fleet, d_cap, feat), np.float32)
-        ys = np.zeros((n, k_fleet, d_cap), np.int32)
-        ms = np.zeros((n, k_fleet, d_cap), np.float32)
-        tau_g = np.zeros((n, k_fleet), np.int32)
-        wc = np.zeros((n, k_fleet), np.float32)
-        keepv = np.ones(n, np.float32)
-        fflag = np.zeros(n, np.float32)
-        rmask = np.zeros((n, k_fleet), bool)
-        pmask = np.zeros((n, k_fleet), bool)
-        for i, evs in enumerate(groups):
-            if not evs:
-                continue
-            if self.cfg.mode == "fedasync":
-                # sequential mixes composed into one contraction:
-                # server' = prod(1-b_i) * server + sum_i b_i prod_{j>i}(1-b_j) w_i
-                betas = np.array([a.weight for a in evs])
-                suffix = np.cumprod((1.0 - betas)[::-1])[::-1]
-                keepv[i] = float(suffix[0])
-                comp = betas * np.concatenate([suffix[1:], [1.0]])
-                for a, w_i in zip(evs, comp):
-                    wc[i, a.learner] = w_i
-                fflag[i] = 1.0
-            else:
-                for a in evs:
-                    wc[i, a.learner] = a.weight
-                if evs[-1].flush:
-                    fflag[i] = 1.0
-                    keepv[i] = evs[-1].keep
-            for a in evs:
-                k = a.learner
-                rmask[i, k] = True
-                # a timer-flush closer redispatched BEFORE the timer fired,
-                # so it takes the pre-flush server like any accumulate
-                # upload; only arrival-triggered closers see the post-flush
-                pmask[i, k] = a.flush and not a.timer_flush
-                tau_g[i, k] = a.tau
-                xs[i, k, : a.d] = train.x[a.idx]
-                ys[i, k, : a.d] = train.y[a.idx]
-                ms[i, k, : a.d] = 1.0
-
-        ex = jnp.asarray(eval_batch[0]) if eval_fn is not None else None
-        ey = jnp.asarray(eval_batch[1]) if eval_fn is not None else None
-        disp0 = jax.tree_util.tree_map(
-            lambda p: jnp.broadcast_to(p, (k_fleet,) + p.shape),
-            self.params,
-        )
-        accum0 = jax.tree_util.tree_map(jnp.zeros_like, self.params)
-        self.params, accs = _bucketed_events(
-            self.params, disp0, accum0, jnp.asarray(xs), jnp.asarray(ys),
-            jnp.asarray(ms), jnp.asarray(tau_g), jnp.asarray(wc),
-            jnp.asarray(keepv), jnp.asarray(fflag),
-            jnp.asarray(rmask), jnp.asarray(pmask),
-            jnp.asarray(self.cfg.lr, jnp.float32), ex, ey,
-            max_tau=max_tau, loss_fn=self.loss_fn, eval_fn=eval_fn,
+        self.params, history = _run_group_program(
+            self.params, groups, sched, train, mode=self.cfg.mode,
+            lr=self.cfg.lr, num_learners=self.problem.num_learners,
+            loss_fn=self.loss_fn, eval_fn=eval_fn, eval_batch=eval_batch,
             use_pallas=use_pallas, interpret=interpret,
         )
-        accs = np.asarray(accs)
-
-        history: list[dict] = []
-        group: list[_Arrival] = []
-        for i, evs in enumerate(groups):
-            flushes = [a for a in evs if a.flush]
-            for a in evs:
-                group.append(a)
-                if a.flush:
-                    rec = self._flush_row(a, group)
-                    if eval_fn is not None and a is flushes[-1]:
-                        rec["accuracy"] = float(accs[i])
-                    history.append(rec)
-                    group = []
         return history
+
 
     # -- event-indexed (jagged) device-resident fast path ---------------------
     def run_events(
@@ -1175,6 +1115,105 @@ class AsyncFedEngine:
             buckets, sched, train, eval_fn=eval_fn, eval_batch=eval_batch,
             use_pallas=use_pallas, interpret=interpret,
         )
+
+
+def _run_group_program(params, groups, sched: _Schedule, train: Dataset, *,
+                       mode: str, lr: float, num_learners: int, loss_fn,
+                       eval_fn, eval_batch, use_pallas: bool,
+                       interpret: bool):
+    """Stage one scan step per event group, run the whole campaign as
+    ONE jitted program (``_bucketed_events``), and replay the history
+    rows — THE shared back half of ``run_events`` (jagged segments)
+    and ``run_bucketed`` (grid buckets), so the two scan paths cannot
+    diverge in staging semantics. Module-level so the multi-model engine's
+    per-model replays run the identical program. Returns
+    ``(params, history)``.
+
+    Empty groups are allowed (empty grid buckets; runtime-skipped scan
+    steps). fedasync groups may hold several arrivals (grid
+    ``strict=False`` merging): their sequential mixes are composed
+    into one contraction — for single-arrival groups (always, on the
+    jagged path) the composition degenerates to the schedule's own
+    per-arrival coefficients bitwise. The post-step accuracy is
+    attributed to the group's LAST flush row (earlier merged flushes
+    have no mid-step eval point)."""
+    if eval_fn is not None and eval_batch is None:
+        raise ValueError("eval_fn needs eval_batch=(x, y)")
+    n = len(groups)
+    k_fleet = num_learners
+    feat = train.x.shape[1]
+    d_cap, max_tau = sched.d_cap, sched.max_tau
+    xs = np.zeros((n, k_fleet, d_cap, feat), np.float32)
+    ys = np.zeros((n, k_fleet, d_cap), np.int32)
+    ms = np.zeros((n, k_fleet, d_cap), np.float32)
+    tau_g = np.zeros((n, k_fleet), np.int32)
+    wc = np.zeros((n, k_fleet), np.float32)
+    keepv = np.ones(n, np.float32)
+    fflag = np.zeros(n, np.float32)
+    rmask = np.zeros((n, k_fleet), bool)
+    pmask = np.zeros((n, k_fleet), bool)
+    for i, evs in enumerate(groups):
+        if not evs:
+            continue
+        if mode == "fedasync":
+            # sequential mixes composed into one contraction:
+            # server' = prod(1-b_i) * server + sum_i b_i prod_{j>i}(1-b_j) w_i
+            betas = np.array([a.weight for a in evs])
+            suffix = np.cumprod((1.0 - betas)[::-1])[::-1]
+            keepv[i] = float(suffix[0])
+            comp = betas * np.concatenate([suffix[1:], [1.0]])
+            for a, w_i in zip(evs, comp):
+                wc[i, a.learner] = w_i
+            fflag[i] = 1.0
+        else:
+            for a in evs:
+                wc[i, a.learner] = a.weight
+            if evs[-1].flush:
+                fflag[i] = 1.0
+                keepv[i] = evs[-1].keep
+        for a in evs:
+            k = a.learner
+            rmask[i, k] = True
+            # a timer-flush closer redispatched BEFORE the timer fired,
+            # so it takes the pre-flush server like any accumulate
+            # upload; only arrival-triggered closers see the post-flush
+            pmask[i, k] = a.flush and not a.timer_flush
+            tau_g[i, k] = a.tau
+            xs[i, k, : a.d] = train.x[a.idx]
+            ys[i, k, : a.d] = train.y[a.idx]
+            ms[i, k, : a.d] = 1.0
+
+    ex = jnp.asarray(eval_batch[0]) if eval_fn is not None else None
+    ey = jnp.asarray(eval_batch[1]) if eval_fn is not None else None
+    disp0 = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p, (k_fleet,) + p.shape),
+        params,
+    )
+    accum0 = jax.tree_util.tree_map(jnp.zeros_like, params)
+    params, accs = _bucketed_events(
+        params, disp0, accum0, jnp.asarray(xs), jnp.asarray(ys),
+        jnp.asarray(ms), jnp.asarray(tau_g), jnp.asarray(wc),
+        jnp.asarray(keepv), jnp.asarray(fflag),
+        jnp.asarray(rmask), jnp.asarray(pmask),
+        jnp.asarray(lr, jnp.float32), ex, ey,
+        max_tau=max_tau, loss_fn=loss_fn, eval_fn=eval_fn,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    accs = np.asarray(accs)
+
+    history: list[dict] = []
+    group: list[_Arrival] = []
+    for i, evs in enumerate(groups):
+        flushes = [a for a in evs if a.flush]
+        for a in evs:
+            group.append(a)
+            if a.flush:
+                rec = _flush_row(a, group, mode)
+                if eval_fn is not None and a is flushes[-1]:
+                    rec["accuracy"] = float(accs[i])
+                history.append(rec)
+                group = []
+    return params, history
 
 
 @functools.partial(

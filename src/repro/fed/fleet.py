@@ -57,10 +57,12 @@ from repro import compat
 from repro.core.solver_batched import (
     BatchedProblems,
     TRACED_POLICIES,
+    apply_active_mask,
     apply_sampling_mask,
     batched_avg_staleness,
     batched_max_staleness,
     batched_policy,
+    cross_model_weights,
 )
 from repro.core.staleness import STALENESS_FNS, staleness_factor
 from repro.data.pipeline import Dataset, FederatedPartitioner
@@ -405,6 +407,71 @@ class FleetEngine:
             d = np.asarray(d, np.int64)
             self._last_feasible = np.asarray(feas, bool)
         return tau, d
+
+    def solve_multimodel(self, deficits, *, split: str = "deficit",
+                         share_floor: float = 0.0, sampled=None):
+        """(tau, d, w) for S tenant models time-sharing the whole (F, K)
+        population — the fleet-scale face of the cross-model allocation
+        layer (``core.solver_batched.multimodel_policy``).
+
+        ``deficits`` is the (S,) global progress-deficit signal (one per
+        tenant's GLOBAL server); ``cross_model_weights`` turns it into
+        shares ``w`` splitting every fleet's deadline ``T_f`` (and joule
+        budgets, for energy-aware schemes), per-model sample budgets are
+        scaled by ``round(w_s * total_f)``, and cells whose share cannot
+        cover ``d_lo`` at tau = 0 degrade to padded slots — semantics
+        mirroring ``multimodel_policy`` exactly, lifted one axis up. The
+        S x F problems are flattened model-major to ``(S * F_pad, K)``
+        and solved with ONE sharded ``_fleet_solve`` call
+        (``fleet_partition_axes`` falls back to replication when the
+        flattened dim does not divide the mesh).
+
+        Returns ``(tau, d, w)`` with tau/d ``(S, F_pad, K)`` int64.
+        S = 1 short-circuits to ``_solve`` — the SAME call the
+        single-tenant rounds make, bitwise."""
+        sampled = self._real if sampled is None else np.asarray(sampled, bool)
+        deficits = np.asarray(deficits, np.float64)
+        s = int(deficits.shape[0])
+        if s == 1:
+            tau, d = self._solve(sampled)
+            return tau[None], d[None], np.ones(1)
+        f_pad, k = np.asarray(self.problems.c2).shape
+        axes = fleet_partition_axes(s * f_pad, self.mesh)
+        en = self._energy_args()
+        with enable_x64():
+            w = cross_model_weights(
+                jnp.asarray(deficits), policy=split, share_floor=share_floor
+            )
+            c2, c1, c0, T, total, lo, hi, valid = self._solve_args()
+            tile = lambda a: jnp.tile(a, (s,) + (1,) * (a.ndim - 1))
+            w_f = jnp.repeat(w.astype(T.dtype), f_pad)        # (S*F_pad,)
+            T_s = w_f * tile(T)
+            total_s = jnp.round(
+                w_f * tile(total).astype(T.dtype)
+            ).astype(total.dtype)
+            c2_t, c1_t, c0_t = tile(c2), tile(c1), tile(c0)
+            lo_t, hi_t, valid_t = tile(lo), tile(hi), tile(valid)
+            active = valid_t & (T_s[:, None] >= c0_t + c1_t * lo_t)
+            total_s, lo_t, hi_t, valid_t = apply_active_mask(
+                total_s, lo_t, hi_t, valid_t, active
+            )
+            if en:
+                e2, e1, e0, eb = (tile(e) for e in en)
+                eb = jnp.where(jnp.isinf(eb), eb, w_f[:, None] * eb)
+                en = (e2, e1, e0, eb)
+            tau, d, feas = _fleet_solve(
+                c2_t, c1_t, c0_t, T_s, total_s, lo_t, hi_t, valid_t,
+                jnp.asarray(np.tile(sampled, s)), *en,
+                scheme=self.cfg.scheme, mesh=self.mesh, fleet_axes=axes,
+            )
+            tau = np.asarray(tau, np.int64).reshape(s, f_pad, k)
+            d = np.asarray(d, np.int64).reshape(s, f_pad, k)
+            feas = np.asarray(feas, bool).reshape(s, f_pad)
+            w = np.asarray(w, np.float64)
+        for si in range(s):
+            self._check_feasible(sampled, feas[si],
+                                 f"multimodel solve, model {si}")
+        return tau, d, w
 
     def _check_feasible(self, sampled, feas, label: str):
         bad = self._real & np.asarray(sampled, bool) & ~np.asarray(feas, bool)

@@ -93,7 +93,9 @@ SCHEMES: dict[str, Callable[[AllocationProblem], Allocation]] = {
 }
 
 # schemes whose traced policy takes the extra (e2, e1, e0, e_budget) operand
-ENERGY_SCHEMES = frozenset({"kkt_energy"})
+# (with e_budget = +inf the operand is decision-inert, so listing a scheme
+# here never changes its energy-blind allocations)
+ENERGY_SCHEMES = frozenset({"kkt_energy", "pgd"})
 
 
 @dataclasses.dataclass(frozen=True)

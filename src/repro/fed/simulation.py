@@ -47,6 +47,8 @@ __all__ = [
     "build_energy_problem",
     "energy_sweep",
     "fleet_scale_sweep",
+    "multi_model_sweep",
+    "laggard_time_to_accuracy",
 ]
 
 
@@ -641,7 +643,8 @@ def build_energy_problem(
     variables carry a joule cost per cycle. ``e_budget=None`` attaches the
     model for ACCOUNTING only (any scheme may run; ``Allocation.validate``
     has nothing to enforce); a finite budget makes the problem strict —
-    only energy-aware schemes (``kkt_energy``) can solve it."""
+    only energy-aware schemes (``kkt_energy``, the budgeted ``pgd``) can
+    solve it."""
     cost = mnist_dnn_cost()
     profiles = indoor_80211_profile(k, seed=seed)
     tm = TimeModel.build(
@@ -704,7 +707,7 @@ def energy_sweep(
     for frac in budget_fracs:
         eb = float(frac) * float(np.median(e_blind))
         for scheme in schemes:
-            aware = scheme == "kkt_energy"
+            aware = scheme in ("kkt_energy", "pgd")
             prob = (dataclasses.replace(prob_free, e_budget=eb)
                     if aware else prob_free)
             res = run_async_experiment(
@@ -814,3 +817,115 @@ def fleet_scale_sweep(
             ),
         })
     return rows
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant simultaneous training (fed.multimodel)
+# ---------------------------------------------------------------------------
+
+def multi_model_sweep(
+    totals=(200, 200, 600),
+    *,
+    k: int = 4,
+    T: float = 8.0,
+    cycles: int = 8,
+    splits=("deficit", "equal"),
+    mode: str = "fedasync",
+    alpha: float = 0.6,
+    lr: float = 0.05,
+    share_floor: float = 0.1,
+    seed: int = 0,
+    train: Dataset | None = None,
+    test: Dataset | None = None,
+) -> list[dict]:
+    """S tenant models time-sharing one fleet, deficit split vs equal
+    split (``fed.multimodel.MultiModelEngine``), at equal virtual time.
+
+    The tenants differ only in per-round sample budget (``totals``): the
+    LAGGARD (largest total) needs more learner-seconds per aggregation,
+    so under the equal split it falls behind in server versions while the
+    light tenants spin. The deficit split reads that version gap
+    (FedAST-style behind-ness — model-value-free) and shifts each
+    learner's time budget toward the laggard; the frontier question is
+    the laggard's time-to-accuracy. Each row reports per-model accuracy
+    traces, final versions, and the laggard's trace for the
+    time-to-accuracy comparison in ``benchmarks/multimodel_bench.py``.
+
+    ``share_floor`` defaults to 0.1: a floored split keeps every
+    tenant's slice of the deadline large enough that the deadline-filling
+    solver doesn't pile hundreds of local iterations onto a handful of
+    samples (tiny ``w`` => tiny ``d`` at the box floor => huge ``tau``,
+    which diverges plain GD). ``lr`` is likewise gentler than the
+    single-model default for the same reason."""
+    from repro.fed.async_engine import AsyncConfig
+    from repro.fed.multimodel import MultiModelEngine
+
+    s = len(totals)
+    probs = [
+        build_problem(k, T, total_samples=int(t), seed=seed) for t in totals
+    ]
+    if train is None or test is None:
+        train, test = synthetic_mnist(
+            max(max(totals) * 2, 12_000), seed=seed
+        )
+    eval_batch = (test.x[:2000], test.y[:2000])
+    params = tuple(
+        mlp.init(jax.random.key(seed + i)) for i in range(s)
+    )
+    laggard = int(np.argmax(totals))
+    horizon = cycles * T
+    rows: list[dict] = []
+    for split in splits:
+        cfg = AsyncConfig(mode=mode, alpha=alpha, lr=lr, staleness_fn="poly")
+        eng = MultiModelEngine(
+            cfg, probs, mlp.loss, params, seed=seed, split=split,
+            share_floor=share_floor,
+        )
+        histories = eng.run(
+            [train] * s, horizon,
+            eval_fns=[mlp.accuracy] * s, eval_batches=[eval_batch] * s,
+        )
+        traces = [
+            [(round(float(r["t"]), 3), round(float(r["accuracy"]), 4))
+             for r in h if "accuracy" in r]
+            for h in histories
+        ]
+        rows.append({
+            "S": s,
+            "K": k,
+            "T": T,
+            "cycles": cycles,
+            "mode": mode,
+            "lr": lr,
+            "split": split,
+            "share_floor": share_floor,
+            "totals": [int(t) for t in totals],
+            "laggard": laggard,
+            "versions": [int(h[-1]["server_version"]) if h else 0
+                         for h in histories],
+            "final_accuracy": [t[-1][1] if t else 0.0 for t in traces],
+            "laggard_trace": traces[laggard],
+            "events": sum(len(h) for h in histories),
+            "split_weights_seen": [
+                [round(float(x), 4) for x in w]
+                for w in eng.split_weight_log[:8]
+            ],
+        })
+    return rows
+
+
+def laggard_time_to_accuracy(rows, target: float | None = None):
+    """First virtual time each split's laggard reaches ``target`` accuracy
+    (default: 95% of the worst split's laggard final accuracy, so every
+    row has a finite crossing). Returns ``{split: t}``."""
+    if target is None:
+        finals = [r["laggard_trace"][-1][1] for r in rows
+                  if r["laggard_trace"]]
+        target = 0.95 * min(finals)
+    out = {}
+    for r in rows:
+        t_hit = next(
+            (t for t, acc in r["laggard_trace"] if acc >= target), None
+        )
+        out[r["split"]] = t_hit
+    return out, float(target)

@@ -19,6 +19,7 @@ __all__ = [
     "swiglu_fused",
     "mamba_scan",
     "waterfill_residual",
+    "waterfill_energy_residual",
 ]
 
 
@@ -75,6 +76,28 @@ def waterfill_residual(tau_star, c2, c1, c0, T, d_lo, d_hi, total, *,
     from repro.kernels.ref import waterfill_residual_ref
 
     return waterfill_residual_ref(tau_star, c2, c1, c0, T, d_lo, d_hi, total)
+
+
+def waterfill_energy_residual(tau_star, c2, c1, c0, T, e2, e1, e0, eb,
+                              d_lo, d_hi, total, *,
+                              use_pallas=False, interpret=False):
+    """Energy-budgeted water-filling residual
+    sum_k clip(min((T-c0)/(c2*tau+c1), (eb-e0)/(e2*tau+e1)), lo, hi)
+    - total for a (B, K) fleet batch — the inner evaluation of every
+    ``kkt_energy`` bisection step (arXiv 2012.00143). ``eb = +inf`` rows
+    reproduce ``waterfill_residual`` bitwise on both backends."""
+    if use_pallas:
+        from repro.kernels.waterfill import waterfill_energy_residual_pallas
+
+        return waterfill_energy_residual_pallas(
+            tau_star, c2, c1, c0, T, e2, e1, e0, eb, d_lo, d_hi, total,
+            interpret=interpret,
+        )
+    from repro.kernels.ref import waterfill_energy_residual_ref
+
+    return waterfill_energy_residual_ref(
+        tau_star, c2, c1, c0, T, e2, e1, e0, eb, d_lo, d_hi, total
+    )
 
 
 def swiglu_fused(x, w_gate, w_up, w_down, *, use_pallas=False, interpret=False):

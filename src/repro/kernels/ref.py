@@ -13,6 +13,7 @@ __all__ = [
     "swiglu_ref",
     "mamba_scan_ref",
     "waterfill_residual_ref",
+    "waterfill_energy_residual_ref",
 ]
 
 
@@ -59,6 +60,21 @@ def waterfill_residual_ref(tau_star, c2, c1, c0, T, d_lo, d_hi, total):
     tau_star/T/total: (B,); c2/c1/c0/d_lo/d_hi: (B, K). Returns (B,)."""
     d = (T[:, None] - c0) / (c2 * tau_star[:, None] + c1)
     return jnp.clip(d, d_lo, d_hi).sum(axis=-1) - total
+
+
+def waterfill_energy_residual_ref(tau_star, c2, c1, c0, T, e2, e1, e0, eb,
+                                  d_lo, d_hi, total):
+    """Energy-budgeted water-filling residual (arXiv 2012.00143): each
+    learner absorbs the tightest of the deadline hyperbola
+    ``(T - c0)/(c2 tau* + c1)`` and the budget hyperbola
+    ``(eb - e0)/(e2 tau* + e1)``. The time branch repeats
+    ``waterfill_residual_ref`` op-for-op, and ``min(d_time, inf)`` selects
+    it bitwise under IEEE inf arithmetic, so ``eb = +inf`` rows degenerate
+    to the unbudgeted residual exactly. tau_star/T/total: (B,); the six
+    coefficient rows and the bounds: (B, K). Returns (B,)."""
+    dt = (T[:, None] - c0) / (c2 * tau_star[:, None] + c1)
+    de = (eb - e0) / (e2 * tau_star[:, None] + e1)
+    return jnp.clip(jnp.minimum(dt, de), d_lo, d_hi).sum(axis=-1) - total
 
 
 def mamba_scan_ref(dt, x, b, c, a, h0=None):

@@ -39,7 +39,8 @@ def test_docs_exist():
     """The docs suite this gate guards must actually be present."""
     names = {p.name for p in (ROOT / "docs").glob("*.md")}
     assert {"architecture.md", "allocation.md", "async_engine.md",
-            "robustness.md", "fleet_scale.md", "energy.md"} <= names
+            "robustness.md", "fleet_scale.md", "energy.md",
+            "multi_model.md"} <= names
 
 
 @pytest.mark.parametrize(

@@ -212,9 +212,22 @@ def test_feasible_or_degraded_affordability():
     assert (starved.tau == 0).all() and (starved.d == 0).all()
 
 
-def test_kkt_energy_rejects_pallas_path():
-    with pytest.raises(ValueError, match="jnp-reference only"):
-        batched_policy("kkt_energy", use_pallas=True)
+def test_kkt_energy_pallas_requires_f32():
+    bp = BatchedProblems.from_problems([_prob(e_budget=5.0)])
+    with pytest.raises(ValueError, match="x64=False"):
+        solve_energy_batched(bp, use_pallas=True)
+
+
+def test_kkt_energy_pallas_interpret_matches_reference():
+    """The Pallas residual kernel behind ``use_pallas=True`` lands on the
+    same integer decisions as the jnp f32 reference (interpret mode)."""
+    probs = [_prob(e_budget=5.0, seed=s) for s in range(3)]
+    bp = BatchedProblems.from_problems(probs)
+    ref = solve_energy_batched(bp, x64=False)
+    pal = solve_energy_batched(bp, x64=False, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(pal.tau, ref.tau)
+    np.testing.assert_array_equal(pal.d, ref.d)
+    np.testing.assert_array_equal(pal.feasible, ref.feasible)
 
 
 # ---------------------------------------------------------------------------

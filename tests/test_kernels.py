@@ -190,3 +190,109 @@ def test_waterfill_residual_k1_fleet():
     np.testing.assert_allclose(
         np.asarray(got), d.sum(axis=1) - tot, rtol=2e-5, atol=2e-3
     )
+
+
+# ---------------------------------------------------------------------------
+# energy-budgeted waterfill residual (Pallas interpret vs ref)
+# ---------------------------------------------------------------------------
+
+def _energy_case(b, k, tau, scale_T=1.0, eb_value=None):
+    """The ``_waterfill_case`` fixtures extended with energy rows: same
+    time coefficients and seeding, plus ``(e2, e1, e0, eb)`` drawn from
+    the same generator (``eb_value`` pins the budget, e.g. +inf)."""
+    tau_v, c2, c1, c0, T, lo, hi, tot = _waterfill_case(b, k, tau, scale_T)
+    rng = np.random.default_rng(b * 7 + k + 1000)
+    e2 = jnp.asarray(rng.uniform(1e-4, 1e-2, (b, k)), jnp.float32)
+    e1 = jnp.asarray(rng.uniform(1e-4, 1e-2, (b, k)), jnp.float32)
+    e0 = jnp.asarray(rng.uniform(0.05, 1.0, (b, k)), jnp.float32)
+    eb = jnp.asarray(
+        np.full((b, k), eb_value) if eb_value is not None
+        else rng.uniform(2.0, 12.0, (b, k)),
+        jnp.float32,
+    )
+    return tau_v, c2, c1, c0, T, e2, e1, e0, eb, lo, hi, tot
+
+
+@pytest.mark.parametrize(
+    "name,tau,scale_T",
+    [
+        # tau* so large both hyperbolae collapse: every learner clips at d_lo
+        ("all_saturated_lo", 1e6, 1.0),
+        # tau* = 0 with huge deadline AND budget: every learner clips at d_hi
+        ("all_slack_hi", 0.0, 1e4),
+    ],
+)
+@pytest.mark.parametrize("b,k", [(4, 10), (3, 37)])
+def test_waterfill_energy_residual_all_clipped(name, tau, scale_T, b, k):
+    from repro.kernels import ops
+    from repro.kernels.ref import waterfill_energy_residual_ref
+
+    eb_value = 1e9 if name == "all_slack_hi" else None
+    args = _energy_case(b, k, tau, scale_T, eb_value=eb_value)
+    got = ops.waterfill_energy_residual(*args, use_pallas=True, interpret=True)
+    want = waterfill_energy_residual_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-3)
+    lo, hi, tot = args[9], args[10], args[11]
+    bound = lo if name == "all_saturated_lo" else hi
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(bound.sum(axis=1) - tot),
+        rtol=2e-5, atol=2e-3,
+    )
+
+
+def test_waterfill_energy_residual_binding_budget():
+    """Mid-range tau* with finite budgets: the energy hyperbola binds for
+    some learners and the kernel must pick min(d_time, d_energy) per
+    learner, exactly as the ref does."""
+    from repro.kernels import ops
+    from repro.kernels.ref import waterfill_energy_residual_ref
+
+    args = _energy_case(4, 10, 2.0)
+    got = ops.waterfill_energy_residual(*args, use_pallas=True, interpret=True)
+    want = waterfill_energy_residual_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-3)
+    tau, c2, c1, c0, T, e2, e1, e0, eb, lo, hi, tot = (
+        np.asarray(a) for a in args
+    )
+    dt = (T[:, None] - c0) / (c2 * tau[:, None] + c1)
+    de = (eb - e0) / (e2 * tau[:, None] + e1)
+    assert (de < dt).any(), "fixture must make the budget bind somewhere"
+    d = np.clip(np.minimum(dt, de), lo, hi)
+    np.testing.assert_allclose(
+        np.asarray(got), d.sum(axis=1) - tot, rtol=2e-5, atol=2e-3
+    )
+
+
+def test_waterfill_energy_residual_inf_budget_matches_time_only():
+    """eb = +inf rows reproduce the unbudgeted residual BITWISE on both
+    backends (IEEE min(d_time, inf) selects the time branch)."""
+    from repro.kernels import ops
+    from repro.kernels.ref import waterfill_residual_ref
+
+    args = _energy_case(3, 37, 2.0, eb_value=np.inf)
+    tau, c2, c1, c0, T = args[:5]
+    lo, hi, tot = args[9], args[10], args[11]
+    time_only = (tau, c2, c1, c0, T, lo, hi, tot)
+    for use_pallas in (False, True):
+        got = ops.waterfill_energy_residual(
+            *args, use_pallas=use_pallas, interpret=use_pallas
+        )
+        want = ops.waterfill_residual(
+            *time_only, use_pallas=use_pallas, interpret=use_pallas
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_waterfill_energy_residual_k1_fleet():
+    """K=1 fleets: the single learner's budgeted absorption must survive
+    the 128-lane pad exactly (pad lanes use unit rows + zero box)."""
+    from repro.kernels import ops
+    from repro.kernels.ref import waterfill_energy_residual_ref
+
+    args = _energy_case(5, 1, 2.0)
+    got = ops.waterfill_energy_residual(*args, use_pallas=True, interpret=True)
+    want = waterfill_energy_residual_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-3)
