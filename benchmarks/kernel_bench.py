@@ -70,3 +70,95 @@ def main(quick: bool = False):
 
 if __name__ == "__main__":
     main()
+
+
+# ---------------------------------------------------------------------------
+# megakernel: the fused train+aggregate step (ops.train_agg_step)
+# ---------------------------------------------------------------------------
+
+def _megakernel_case(k: int, n: int, tau_hi: int, layers, seed: int):
+    """f32 fixtures in the exact shapes the async scan feeds the kernel."""
+    import numpy as np
+
+    from repro.models import mlp
+
+    rng = np.random.default_rng(seed)
+    stack = [mlp.init(jax.random.key(int(s)), layers)
+             for s in rng.integers(2**31, size=k)]
+    disp = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *stack)
+    x = jnp.asarray(rng.standard_normal((k, n, layers[0])), jnp.float32)
+    y = jnp.asarray(rng.integers(0, layers[-1], (k, n)), jnp.int32)
+    m = jnp.asarray(rng.integers(0, 2, (k, n)), jnp.float32)
+    tau = jnp.asarray(rng.integers(1, tau_hi + 1, (k,)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, (k,)), jnp.float32)
+    return disp, x, y, m, tau, w
+
+
+def _megakernel_parity(layers=(16, 16, 4), seed=0) -> None:
+    """Fixed-seed gate: the Pallas megakernel (interpret) must match the
+    unfused local_train_stacked + fed_agg composition BITWISE before any
+    timing row is merged. Raises on the first differing bit."""
+    import numpy as np
+
+    from repro.models import mlp
+
+    disp, x, y, m, tau, w = _megakernel_case(4, 16, 3, list(layers), seed)
+    lr = jnp.float32(0.05)
+    want, _ = ops.train_agg_step(disp, x, y, m, tau, w, lr, loss_fn=mlp.loss,
+                                 max_tau=int(tau.max()))
+    got, _ = ops.train_agg_step(disp, x, y, m, tau, w, lr, loss_fn=mlp.loss,
+                                use_pallas=True, interpret=True)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise AssertionError(
+                "megakernel parity gate failed: fused != unfused bitwise"
+            )
+
+
+def megakernel_rows(quick: bool = True):
+    """Per-step wall time, fused vs unfused. The fused row is timed only
+    on a real accelerator backend — interpret mode is a correctness
+    vehicle, not a performance path, and is EXCLUDED from timing."""
+    from repro.models import mlp
+
+    cases = [("mlp_paper_k4_n64_tau16", 4, 64, 16, mlp.PAPER_LAYERS)]
+    if not quick:
+        cases.append(("mlp_paper_k10_n128_tau16", 10, 128, 16,
+                      mlp.PAPER_LAYERS))
+    backend = jax.default_backend()
+    lr = jnp.float32(0.05)
+    rows = []
+    for name, k, n, tau_hi, layers in cases:
+        operands = _megakernel_case(k, n, tau_hi, layers, seed=0)
+        max_tau = int(operands[4].max())
+
+        unfused = jax.jit(lambda d_, x_, y_, m_, t_, w_: ops.train_agg_step(
+            d_, x_, y_, m_, t_, w_, lr, loss_fn=mlp.loss, max_tau=max_tau)[0])
+        rows.append({"case": name, "path": "unfused", "backend": backend,
+                     "us_per_step": round(_time(unfused, *operands), 1)})
+
+        if backend != "cpu":
+            fused = jax.jit(lambda d_, x_, y_, m_, t_, w_: ops.train_agg_step(
+                d_, x_, y_, m_, t_, w_, lr, loss_fn=mlp.loss,
+                use_pallas=True)[0])
+            rows.append({"case": name, "path": "pallas", "backend": backend,
+                         "us_per_step": round(_time(fused, *operands), 1)})
+        else:
+            rows.append({"case": name, "path": "pallas", "backend": backend,
+                         "us_per_step": None,
+                         "note": "interpret-only on CPU; excluded from timing"})
+    return rows
+
+
+def megakernel_main(quick: bool = False):
+    """`--only megakernel`: bitwise parity gate first, then the per-step
+    fused-vs-unfused table merged under BENCH_alloc.json[megakernel]."""
+    from benchmarks.alloc_bench import _merge_out
+
+    _megakernel_parity()
+    print("parity: fused == unfused bitwise on fixed seed", flush=True)
+    rows = megakernel_rows(quick=quick)
+    for r in rows:
+        print(f"{r['case']},{r['path']},{r['us_per_step']}")
+    _merge_out("megakernel", {"parity_bitwise": True, "rows": rows})

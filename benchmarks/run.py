@@ -59,6 +59,7 @@ SECTIONS = [
     ("multimodel_bench", multimodel_bench.main),
     ("fleet_scale", fleet_scale.main),
     ("kernel_bench", kernel_bench.main),
+    ("megakernel_bench", kernel_bench.megakernel_main),
     ("roofline_report", roofline_report.main),
     ("fig3_accuracy_vs_cycles", accuracy_vs_cycles.main),
 ]

@@ -211,12 +211,14 @@ def _fleet_solve(c2, c1, c0, T, total, d_lo, d_hi, valid, sampled, *en,
 @functools.partial(
     jax.jit,
     static_argnames=("max_tau", "loss_fn", "eval_fn", "aggregation",
-                     "scheme", "mesh", "fleet_axes"),
+                     "scheme", "mesh", "fleet_axes", "use_pallas",
+                     "interpret"),
 )
 def _fleet_round(g, fleet_params, x, y, m, tau, d, base_w, sampled, mix, lr,
                  gamma, c2, c1, c0, T, total, d_lo, d_hi, valid, ex, ey, *en,
                  max_tau: int, loss_fn, eval_fn, aggregation: str,
-                 scheme: str, mesh, fleet_axes):
+                 scheme: str, mesh, fleet_axes, use_pallas: bool = False,
+                 interpret: bool = False):
     """One global round as one XLA program (see module docstring): vmapped
     per-fleet train+aggregate, psum-normalized two-tier merge of the
     sampled fleets, and the next dispatch's sampling-masked policy solve.
@@ -234,10 +236,23 @@ def _fleet_round(g, fleet_params, x, y, m, tau, d, base_w, sampled, mix, lr,
              ex, ey, *en):
         # -- tier 1: each fleet trains its K learners and aggregates ------
         def fleet_step(fp, xf, yf, mf, tf, df):
+            w = _weights_traced(tf, df, aggregation=aggregation, gamma=gamma)
+            if use_pallas:
+                from repro.kernels import ops
+
+                kf = xf.shape[0]
+                disp = jax.tree_util.tree_map(
+                    lambda leaf: jnp.broadcast_to(leaf, (kf,) + leaf.shape),
+                    fp,
+                )
+                new, _ = ops.train_agg_step(
+                    disp, xf, yf, mf, tf, w, lr, loss_fn=loss_fn,
+                    max_tau=max_tau, use_pallas=True, interpret=interpret,
+                )
+                return new
             locals_ = local_train(
                 fp, xf, yf, mf, tf, lr, max_tau=max_tau, loss_fn=loss_fn
             )
-            w = _weights_traced(tf, df, aggregation=aggregation, gamma=gamma)
             return jax.tree_util.tree_map(
                 functools.partial(_wsum, w=w), locals_
             )
@@ -517,12 +532,17 @@ class FleetEngine:
 
     # -- full run -----------------------------------------------------------
     def run(self, train: Dataset, rounds: int, *, eval_fn=None,
-            eval_batch=None) -> list[dict]:
+            eval_batch=None, use_pallas: bool = False,
+            interpret: bool = False) -> list[dict]:
         """Run ``rounds`` global rounds; returns one history record per
         round. ``eval_fn`` must be jit-traceable ``(params, x, y) ->
         scalar`` (e.g. ``mlp.accuracy``) evaluated on ``eval_batch`` inside
-        the round program. Repeated calls continue from the current state
-        (fresh partitioners, like ``Orchestrator.run``)."""
+        the round program. ``use_pallas`` routes each fleet's vmapped
+        train+aggregate step through the ``ops.train_agg_step`` megakernel
+        (``interpret=True`` emulates it on CPU); the default keeps the
+        unfused ``local_train`` + ``_wsum`` tier-1 body. Repeated calls
+        continue from the current state (fresh partitioners, like
+        ``Orchestrator.run``)."""
         if eval_fn is not None and eval_batch is None:
             raise ValueError("eval_fn needs eval_batch=(x, y)")
         cfg = self.cfg
@@ -562,6 +582,7 @@ class FleetEngine:
                     max_tau=max_tau, loss_fn=self.loss_fn, eval_fn=eval_fn,
                     aggregation=cfg.aggregation, scheme=cfg.scheme,
                     mesh=self.mesh, fleet_axes=self.fleet_axes,
+                    use_pallas=use_pallas, interpret=interpret,
                 )
                 feas_h = np.asarray(feas, bool)
             self._check_feasible(sampled, feas_h, f"round {r}")

@@ -178,14 +178,13 @@ def _fused_cycles(params, xs, ys, ms, tau, weights, lr, eval_x, eval_y, *,
 
     def one_cycle(p, batch):
         x, y, m = batch
-        locals_ = local_train(
-            p, x, y, m, tau, lr, max_tau=max_tau, loss_fn=loss_fn
+        k = x.shape[0]
+        disp = jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(leaf, (k,) + leaf.shape), p
         )
-        new = jax.tree_util.tree_map(
-            lambda leaf: ops.fed_agg(
-                leaf, weights, use_pallas=use_pallas, interpret=interpret
-            ),
-            locals_,
+        new, _ = ops.train_agg_step(
+            disp, x, y, m, tau, weights, lr, loss_fn=loss_fn,
+            max_tau=max_tau, use_pallas=use_pallas, interpret=interpret,
         )
         acc = eval_fn(new, eval_x, eval_y) if eval_fn is not None else jnp.float32(0)
         return new, acc
@@ -564,15 +563,23 @@ def _fused_realloc_cycles(params, state0, xs, ys, c2b, c1b, c0b, T1, total1,
             x = jnp.take(x_flat, safe, axis=0)          # (K, d_cap, F)
             y = jnp.take(y_flat, safe, axis=0)          # (K, d_cap)
 
-            locals_ = _local_train_dynamic(
-                p, x, y, m.astype(jnp.float32), tau, lr, loss_fn=loss_fn,
-            )
-            new = jax.tree_util.tree_map(
-                lambda leaf: ops.fed_agg(
-                    leaf, w, use_pallas=use_pallas, interpret=interpret
-                ),
-                locals_,
-            )
+            if use_pallas:
+                # megakernel path: the in-kernel fori_loop bounds itself
+                # by the traced max(tau), so no static max_tau is needed
+                disp = jax.tree_util.tree_map(
+                    lambda leaf: jnp.broadcast_to(leaf, (k,) + leaf.shape), p
+                )
+                new, _ = ops.train_agg_step(
+                    disp, x, y, m.astype(jnp.float32), tau, w, lr,
+                    loss_fn=loss_fn, use_pallas=True, interpret=interpret,
+                )
+            else:
+                locals_ = _local_train_dynamic(
+                    p, x, y, m.astype(jnp.float32), tau, lr, loss_fn=loss_fn,
+                )
+                new = jax.tree_util.tree_map(
+                    lambda leaf: ops.fed_agg(leaf, w), locals_
+                )
             acc = (eval_fn(new, eval_x, eval_y).astype(jnp.float32)
                    if eval_fn is not None else jnp.float32(0))
             return new, acc
@@ -781,9 +788,10 @@ class Orchestrator:
             (e.g. ``mlp.accuracy``), evaluated inside the scan each cycle
             on ``eval_batch``; None skips per-cycle eval.
         eval_batch : ``(x, y)`` arrays; required with ``eval_fn``.
-        use_pallas, interpret : route the ``ops.fed_agg`` aggregation
-            contraction through the Pallas TPU kernel (``interpret=True``
-            emulates it on CPU).
+        use_pallas, interpret : route the whole per-cycle train+aggregate
+            body through the ``ops.train_agg_step`` Pallas megakernel
+            (``interpret=True`` emulates it on CPU); the default runs the
+            unfused ``local_train_stacked`` + ``fed_agg`` composition.
         reallocate : re-solve the allocation INSIDE the scan each cycle on
             that cycle's capacity state via the traced
             ``batched_policy(mel.scheme)`` — still one XLA program, zero

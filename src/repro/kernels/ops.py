@@ -20,6 +20,7 @@ __all__ = [
     "mamba_scan",
     "waterfill_residual",
     "waterfill_energy_residual",
+    "train_agg_step",
 ]
 
 
@@ -97,6 +98,44 @@ def waterfill_energy_residual(tau_star, c2, c1, c0, T, e2, e1, e0, eb,
 
     return waterfill_energy_residual_ref(
         tau_star, c2, c1, c0, T, e2, e1, e0, eb, d_lo, d_hi, total
+    )
+
+
+def train_agg_step(disp, x, y, m, tau, weights, lr, *, loss_fn, max_tau=None,
+                   server=None, acc=None, keep=None, flush=None,
+                   use_pallas=False, interpret=False):
+    """One fused train+aggregate scan step: masked per-learner GD
+    (``local_train_stacked`` numerics — ``tau_k`` steps from each
+    learner's own start params, data mask in the loss contraction),
+    weighted accumulate, and the masked ``fed_agg`` flush contraction.
+
+    ``acc=None`` is the cycle form (``run_fused``/fleet rounds): returns
+    ``(fed_agg(locals, weights), None)``. Passing ``server``/``acc``/
+    ``keep``/``flush`` is the async form (``_bucketed_events``): returns
+    ``(keep*server + flush*acc1, (1-flush)*acc1)`` with
+    ``acc1 = acc + sum_k w_k local_k``.
+
+    The unfused path needs a static ``max_tau`` bound (it runs the
+    ``lax.scan`` of ``local_train_stacked``); the Pallas megakernel
+    bounds its in-kernel ``fori_loop`` by the traced ``max(tau)`` and
+    ignores ``max_tau`` — interpret mode is bitwise equal to the unfused
+    path on f32 operands (``tests/test_kernel_parity.py``).
+    """
+    if use_pallas:
+        from repro.kernels.train_step import train_agg_step_pallas
+
+        return train_agg_step_pallas(
+            disp, x, y, m, tau, weights, lr, loss_fn=loss_fn,
+            server=server, acc=acc, keep=keep, flush=flush,
+            interpret=interpret,
+        )
+    from repro.kernels.ref import train_agg_step_ref
+
+    if max_tau is None:
+        raise ValueError("the unfused path needs a static max_tau bound")
+    return train_agg_step_ref(
+        disp, x, y, m, tau, weights, lr, loss_fn=loss_fn, max_tau=max_tau,
+        server=server, acc=acc, keep=keep, flush=flush,
     )
 
 

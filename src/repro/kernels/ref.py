@@ -14,6 +14,7 @@ __all__ = [
     "mamba_scan_ref",
     "waterfill_residual_ref",
     "waterfill_energy_residual_ref",
+    "train_agg_step_ref",
 ]
 
 
@@ -75,6 +76,41 @@ def waterfill_energy_residual_ref(tau_star, c2, c1, c0, T, e2, e1, e0, eb,
     dt = (T[:, None] - c0) / (c2 * tau_star[:, None] + c1)
     de = (eb - e0) / (e2 * tau_star[:, None] + e1)
     return jnp.clip(jnp.minimum(dt, de), d_lo, d_hi).sum(axis=-1) - total
+
+
+def train_agg_step_ref(disp, x, y, m, tau, weights, lr, *, loss_fn, max_tau,
+                       server=None, acc=None, keep=None, flush=None):
+    """Unfused train+aggregate composition — literally
+    ``local_train_stacked`` followed by the ``fed_agg_ref`` contractions,
+    so the megakernel's bitwise contract is pinned against the exact ops
+    the scan bodies run today. ``acc=None`` selects the cycle form (plain
+    weighted aggregation of the trained locals); otherwise the async
+    accumulate/flush form ``server' = keep*server + flush*(acc + sum_k
+    w_k local_k)``, ``acc' = (1-flush)*(acc + sum_k w_k local_k)``.
+    Returns ``(new_server, new_acc)`` with ``new_acc=None`` in cycle form.
+    """
+    from repro.fed.orchestrator import local_train_stacked
+
+    locals_ = local_train_stacked(disp, x, y, m, tau, lr,
+                                  max_tau=max_tau, loss_fn=loss_fn)
+    w = jnp.asarray(weights, jnp.float32)
+    if acc is None:
+        new = jax.tree_util.tree_map(lambda l: fed_agg_ref(l, w), locals_)
+        return new, None
+    one = jnp.ones((1,), jnp.float32)
+    w_acc = jnp.concatenate([one, w])
+    acc1 = jax.tree_util.tree_map(
+        lambda a, l: fed_agg_ref(jnp.concatenate([a[None], l], axis=0), w_acc),
+        acc, locals_,
+    )
+    keep = jnp.asarray(keep, jnp.float32)
+    flush = jnp.asarray(flush, jnp.float32)
+    w_flush = jnp.stack([keep, flush])
+    server1 = jax.tree_util.tree_map(
+        lambda s, a: fed_agg_ref(jnp.stack([s, a]), w_flush), server, acc1
+    )
+    acc2 = jax.tree_util.tree_map(lambda a: (1.0 - flush) * a, acc1)
+    return server1, acc2
 
 
 def mamba_scan_ref(dt, x, b, c, a, h0=None):

@@ -1,0 +1,183 @@
+"""Pallas TPU megakernel: fused local-GD + weighted accumulate + flush.
+
+Every scan fast path (``Orchestrator.run_fused``, the reallocating scan,
+the async engine's jagged ``run_events``, the fleet engine's vmapped
+per-fleet round) spends its step on the same composition:
+
+  1. masked local GD — each of K learners runs ``tau_k`` gradient steps
+     from its OWN start params on its masked shard
+     (``fed.orchestrator.local_train_stacked``);
+  2. a weighted accumulate of the trained locals
+     (``acc' = acc + sum_k w_k * local_k``);
+  3. the masked ``ops.fed_agg`` flush contraction into the server
+     (``server' = keep * server + f * acc'``).
+
+Unfused, that launches one XLA op per GD step per leaf plus the
+aggregation contractions. This kernel runs the WHOLE composition as one
+Pallas program: every model leaf stays VMEM-resident across the in-kernel
+``fori_loop`` over the traced fleet-max tau (per-step masked with
+``i < tau_k``, the data mask applied inside the loss contraction), and the
+accumulate + flush read the trained locals without ever leaving the core.
+
+Numerics contract (pinned by ``tests/test_kernel_parity.py``): in
+interpret mode the kernel is **bitwise** equal to the unfused
+``local_train_stacked`` + accumulate + ``fed_agg`` composition
+(``kernels.ref.train_agg_step_ref``) on f32 operands — the in-kernel
+``fori_loop`` + ``where`` masking computes the same per-step select as
+``local_train_stacked``'s vmapped ``lax.cond``, and the contractions
+repeat ``fed_agg_ref`` op-for-op.
+
+Fusion boundary: the whole per-step working set — K stacked copies of the
+model, the (K, d_cap, F) shard block, and the grad workspace — must fit
+VMEM (~16 MB/core), which holds for the paper's MLP family at fleet sizes
+K <= 10 but NOT for large models or very wide shard blocks; those stay on
+the unfused path (the default everywhere). The loss_fn is traced into the
+kernel body, so on real TPU it must stick to Mosaic-supported primitives;
+interpret mode (the CI path) runs any jax loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["train_agg_step_pallas"]
+
+
+def _fed_agg_body(stacked, weights):
+    """``kernels.ref.fed_agg_ref`` repeated op-for-op inside the kernel
+    (inlined to keep this module import-light)."""
+    w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1)).astype(jnp.float32)
+    return (stacked.astype(jnp.float32) * w).sum(axis=0).astype(stacked.dtype)
+
+
+def _make_kernel(treedef, n_leaves: int, loss_fn, with_acc: bool):
+    """Kernel body over flattened model leaves. Ref layout:
+    ``(x, y, m, tau, w, scal, *disp[, *server, *acc], *outs)`` where
+    ``outs`` is ``server' + acc'`` leaves (with_acc) or the aggregated
+    model leaves (cycle form)."""
+    L = n_leaves
+
+    def kernel(x_ref, y_ref, m_ref, tau_ref, w_ref, scal_ref, *refs):
+        x = x_ref[...]
+        y = y_ref[...]
+        m = m_ref[...]
+        tau = tau_ref[0, :]
+        w = w_ref[0, :]
+        lr = scal_ref[0, 0]
+        disp = [refs[i][...] for i in range(L)]
+
+        def gd(i, leaves):
+            p = jax.tree_util.tree_unflatten(treedef, leaves)
+            g = jax.vmap(
+                lambda pk, xk, yk, mk: jax.grad(loss_fn)(
+                    pk, {"x": xk, "y": yk, "mask": mk}
+                )
+            )(p, x, y, m)
+            # the same per-step select as local_train_stacked's vmapped
+            # lax.cond: steps at i >= tau_k leave the params untouched
+            new = jax.tree_util.tree_map(
+                lambda pk, gk: jnp.where(
+                    (i < tau).reshape((-1,) + (1,) * (pk.ndim - 1)),
+                    pk - lr * gk, pk,
+                ),
+                p, g,
+            )
+            return jax.tree_util.tree_leaves(new)
+
+        locals_ = jax.lax.fori_loop(0, jnp.max(tau), gd, disp)
+
+        if not with_acc:
+            outs = refs[L:]
+            for i in range(L):
+                outs[i][...] = _fed_agg_body(locals_[i], w)
+            return
+
+        keep = scal_ref[0, 1]
+        flush = scal_ref[0, 2]
+        server = [refs[L + i][...] for i in range(L)]
+        acc = [refs[2 * L + i][...] for i in range(L)]
+        out_server = refs[3 * L: 4 * L]
+        out_acc = refs[4 * L: 5 * L]
+        one = jnp.ones((1,), jnp.float32)
+        w_acc = jnp.concatenate([one, w])
+        w_flush = jnp.stack([keep, flush])
+        for i in range(L):
+            acc1 = _fed_agg_body(
+                jnp.concatenate([acc[i][None], locals_[i]], axis=0), w_acc
+            )
+            out_server[i][...] = _fed_agg_body(
+                jnp.stack([server[i], acc1]), w_flush
+            )
+            out_acc[i][...] = (1.0 - flush) * acc1
+
+    return kernel
+
+
+def train_agg_step_pallas(disp, x, y, m, tau, weights, lr, *, loss_fn,
+                          server=None, acc=None, keep=None, flush=None,
+                          interpret: bool = False):
+    """One fused train+aggregate step (see module docstring).
+
+    disp : model pytree with a leading K learner axis on every leaf
+    x : (K, d_cap, F); y, m : (K, d_cap); tau, weights : (K,)
+    server, acc : model pytrees (no K axis) — the async accumulate/flush
+        form; ``None`` selects the cycle form (plain weighted aggregation
+        of the trained locals, ``keep``/``flush`` unused)
+    keep, flush : f32 scalars — the flush contraction coefficients
+
+    Returns ``(new_server, new_acc)``; ``new_acc`` is None in cycle form.
+    """
+    with_acc = acc is not None
+    if with_acc and (server is None or keep is None or flush is None):
+        raise ValueError("the accumulate/flush form needs server, keep "
+                         "and flush alongside acc")
+    if not with_acc and (server is not None or keep is not None
+                        or flush is not None):
+        raise ValueError("server/keep/flush have no meaning without acc "
+                         "(cycle form aggregates the locals directly)")
+
+    d_leaves, treedef = jax.tree_util.tree_flatten(disp)
+    L = len(d_leaves)
+    k = x.shape[0]
+    tau2 = jnp.asarray(tau, jnp.int32).reshape(1, k)
+    w2 = jnp.asarray(weights, jnp.float32).reshape(1, k)
+    lr_f = jnp.asarray(lr, jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
+    scal = jnp.stack([
+        lr_f,
+        jnp.asarray(keep, jnp.float32) if with_acc else zero,
+        jnp.asarray(flush, jnp.float32) if with_acc else zero,
+    ]).reshape(1, 3)
+
+    vmem = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)
+    smem = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.SMEM)
+    operands = [x, y, m]
+    if with_acc:
+        s_leaves = jax.tree_util.tree_leaves(server)
+        a_leaves = jax.tree_util.tree_leaves(acc)
+        operands += d_leaves + s_leaves + a_leaves
+        out_shape = [jax.ShapeDtypeStruct(l.shape, l.dtype)
+                     for l in s_leaves] * 2
+    else:
+        operands += d_leaves
+        out_shape = [jax.ShapeDtypeStruct(l.shape[1:], l.dtype)
+                     for l in d_leaves]
+
+    kernel = _make_kernel(treedef, L, loss_fn, with_acc)
+    outs = pl.pallas_call(
+        kernel,
+        in_specs=[vmem, vmem, vmem, smem, smem, smem]
+        + [vmem] * (len(operands) - 3),
+        out_specs=[vmem] * len(out_shape),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(operands[0], operands[1], operands[2], tau2, w2, scal, *operands[3:])
+
+    if with_acc:
+        new_server = jax.tree_util.tree_unflatten(treedef, outs[:L])
+        new_acc = jax.tree_util.tree_unflatten(treedef, outs[L:])
+        return new_server, new_acc
+    return jax.tree_util.tree_unflatten(treedef, outs), None

@@ -16,6 +16,7 @@ Logical axis vocabulary (resolved by the sharding rules):
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Callable
 
 import jax
@@ -53,7 +54,10 @@ def init_params(specs, key: jax.Array):
 
     arrays = []
     for (path, spec) in paths:
-        h = abs(hash(jax.tree_util.keystr(path))) % (2**31 - 1)
+        # crc32, NOT hash(): str hashes are salted per-process
+        # (PYTHONHASHSEED), which silently broke cross-process
+        # reproducibility of every init draw
+        h = zlib.crc32(jax.tree_util.keystr(path).encode()) % (2**31 - 1)
         k = jax.random.fold_in(key, h)
         if spec.init == "zeros":
             arr = jnp.zeros(spec.shape, spec.dtype)

@@ -499,3 +499,76 @@ def test_run_async_experiment_modes(data):
     # version staleness exists only without the barrier
     assert out["cycle"]["summary"]["staleness"]["max"] == 0
     assert out["fedasync"]["summary"]["staleness"]["max"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# run_events: staging cache + seg_batch sub-batching
+# ---------------------------------------------------------------------------
+
+def test_run_events_stages_once_per_schedule(data):
+    """The (S, K, d_cap, F) staging tensor is built ONCE per distinct
+    (dataset, schedule) and served from cache on replays — a second
+    same-seed engine re-running the identical schedule must not restage."""
+    from repro.fed.async_engine import clear_staging_cache, staging_cache_stats
+
+    train, _ = data
+    prob = spread_problem()
+    clear_staging_cache()
+    try:
+        for _ in range(2):
+            eng = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob,
+                                 mlp.loss, mlp.init(jax.random.key(1)),
+                                 seed=2)
+            eng.run_events(train, 30.0)
+        stats = staging_cache_stats()
+        assert stats == {"stages": 1, "hits": 1}, stats
+        # a different seed is a different schedule: restage, never serve
+        # another schedule's tensors
+        eng = AsyncFedEngine(AsyncConfig(mode="fedasync"), prob, mlp.loss,
+                             mlp.init(jax.random.key(1)), seed=5)
+        eng.run_events(train, 30.0)
+        stats = staging_cache_stats()
+        assert stats == {"stages": 2, "hits": 1}, stats
+    finally:
+        clear_staging_cache()
+
+
+def test_run_events_seg_batch_matches_dense(data):
+    """Sub-batched jagged segments (seg_batch): history rows bitwise equal
+    to the dense staging; params to float tolerance only — the chunked
+    accumulate folds the same weighted sums in a different order."""
+    train, _ = data
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    cfg = AsyncConfig(mode="buffered", buffer_size=4)
+
+    runs = []
+    for sb in (None, 2):
+        eng = AsyncFedEngine(cfg, prob, mlp.loss,
+                             mlp.init(jax.random.key(2)), seed=2)
+        hist = eng.run_events(train, 45.0, seg_batch=sb)
+        runs.append((hist, eng.params))
+
+    (h0, p0), (h1, p1) = runs
+    assert len(h0) == len(h1) >= 2
+    _assert_history_match(h0, h1)
+    _assert_trees_equal(p0, p1, atol=1e-4, rtol=0)
+
+
+def test_run_events_seg_batch_pallas_matches_seg_batch_unfused(data):
+    """seg_batch and the megakernel compose: the compact scan body through
+    ops.train_agg_step is bitwise equal to its unfused twin."""
+    train, _ = data
+    prob = build_problem(4, 15.0, total_samples=1200, seed=3)
+    cfg = AsyncConfig(mode="buffered", buffer_size=4)
+
+    runs = []
+    for up in (False, True):
+        eng = AsyncFedEngine(cfg, prob, mlp.loss,
+                             mlp.init(jax.random.key(2)), seed=2)
+        hist = eng.run_events(train, 45.0, seg_batch=2, use_pallas=up,
+                              interpret=up)
+        runs.append((hist, eng.params))
+
+    (h0, p0), (h1, p1) = runs
+    _assert_history_match(h0, h1)
+    _assert_trees_equal(p0, p1)

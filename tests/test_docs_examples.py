@@ -40,7 +40,7 @@ def test_docs_exist():
     names = {p.name for p in (ROOT / "docs").glob("*.md")}
     assert {"architecture.md", "allocation.md", "async_engine.md",
             "robustness.md", "fleet_scale.md", "energy.md",
-            "multi_model.md"} <= names
+            "multi_model.md", "kernels.md"} <= names
 
 
 @pytest.mark.parametrize(

@@ -1,0 +1,204 @@
+"""Golden-trace regression fixtures for the async engine.
+
+Two recorded scenarios under ``tests/data/``:
+
+* ``golden_async_fedasync.json`` — plain fedasync arrivals;
+* ``golden_async_cocktail.json`` — buffered M=3 with the full fault
+  cocktail (drops + transit delay + stragglers + deadline redispatch +
+  quorum/timeout degraded flushes).
+
+Each fixture pins the seeded schedule side of the history BITWISE
+(versions, learners, tau, d, staleness, t, f64 weights/keep/energy: all
+host-computed f64/int values that round-trip JSON exactly) and the final
+aggregated params to float tolerance (XLA:CPU re-fuses contractions across
+processes, so trained floats are reproducible only to ~1e-5; see
+CHANGES.md PR 3). The replay runs BOTH executors — the eager ``run`` loop
+and the jitted ``run_events`` jagged scan — against the same fixture, so
+the eager==jagged exactness invariants are guarded against drift in either
+path, not just against each other.
+
+Regenerate (after an INTENTIONAL semantics change only):
+
+    PYTHONPATH=src python -m tests.test_golden_trace
+"""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import synthetic_mnist
+from repro.fed.async_engine import AsyncConfig, AsyncFedEngine
+from repro.fed.simulation import build_problem
+from repro.models import mlp
+
+DATA_DIR = Path(__file__).parent / "data"
+
+# all entropy a scenario needs, spelled out so the fixture is re-derivable
+SCENARIOS = {
+    "fedasync": {
+        "config": {"mode": "fedasync"},
+        "problem": {"k": 4, "T": 15.0, "total_samples": 1200, "seed": 3},
+        "data": {"n": 2000, "n_test": 200, "features": 16, "classes": 4, "seed": 0},
+        "layers": [16, 16, 4],
+        "init_seed": 2,
+        "engine_seed": 2,
+        "horizon": 40.0,
+    },
+    "cocktail": {
+        "config": {
+            "mode": "buffered", "buffer_size": 3,
+            "quorum": 2, "flush_timeout": 6.0,
+            "drop_rate": 0.15,
+            "delay_rate": 0.2, "delay_mean": 0.5,
+            "straggler_rate": 0.2, "straggler_factor": 3.0,
+            "deadline": 30.0, "retry_backoff": 1.0,
+        },
+        "problem": {"k": 5, "T": 15.0, "total_samples": 1500, "seed": 4},
+        "data": {"n": 2000, "n_test": 200, "features": 16, "classes": 4, "seed": 0},
+        "layers": [16, 16, 4],
+        "init_seed": 4,
+        "engine_seed": 7,
+        "horizon": 60.0,
+    },
+}
+
+# schedule-side row fields and their JSON codecs (all bitwise on replay)
+_INT_FIELDS = ("event", "server_version", "version_staleness_max")
+_FLOAT_FIELDS = ("t", "version_staleness_mean", "keep")
+_INTLIST_FIELDS = ("learners", "tau", "d", "staleness_list")
+_FLOATLIST_FIELDS = ("weights", "energy")
+
+
+def _scenario_engine(spec):
+    train, _ = synthetic_mnist(
+        spec["data"]["n"], n_test=spec["data"]["n_test"],
+        features=spec["data"]["features"], classes=spec["data"]["classes"],
+        seed=spec["data"]["seed"],
+    )
+    prob = build_problem(
+        spec["problem"]["k"], spec["problem"]["T"],
+        total_samples=spec["problem"]["total_samples"],
+        seed=spec["problem"]["seed"],
+    )
+    params = mlp.init(jax.random.key(spec["init_seed"]), spec["layers"])
+    eng = AsyncFedEngine(AsyncConfig(**spec["config"]), prob, mlp.loss,
+                         params, seed=spec["engine_seed"])
+    return eng, train
+
+
+def _run_scenario(spec, *, path):
+    eng, train = _scenario_engine(spec)
+    if path == "events":
+        hist = eng.run_events(train, spec["horizon"])
+    else:
+        hist = eng.run(train, spec["horizon"])
+    return hist, eng.params
+
+
+def _row_to_json(r):
+    out = {}
+    for f in _INT_FIELDS:
+        out[f] = int(r[f])
+    for f in _FLOAT_FIELDS:
+        out[f] = float(r[f])
+    for f in _INTLIST_FIELDS:
+        out[f] = [int(v) for v in np.asarray(r[f])]
+    for f in _FLOATLIST_FIELDS:
+        out[f] = [float(v) for v in np.asarray(r[f], np.float64)]
+    out["mode"] = r["mode"]
+    return out
+
+
+def _params_to_json(params):
+    leaves = jax.tree_util.tree_leaves(params)
+    return {
+        "shapes": [list(l.shape) for l in leaves],
+        "leaves": [np.asarray(l, np.float32).ravel().tolist() for l in leaves],
+    }
+
+
+def record(name):
+    spec = SCENARIOS[name]
+    hist, params = _run_scenario(spec, path="run")
+    fixture = {
+        "scenario": name,
+        "spec": spec,
+        "history": [_row_to_json(r) for r in hist],
+        "params": _params_to_json(params),
+    }
+    path = DATA_DIR / f"golden_async_{name}.json"
+    path.parent.mkdir(exist_ok=True)
+    path.write_text(json.dumps(fixture, indent=1) + "\n")
+    return path, len(hist)
+
+
+def _assert_rows_match(got_rows, want_rows, *, path):
+    assert len(got_rows) == len(want_rows), (
+        f"[{path}] {len(got_rows)} aggregations vs {len(want_rows)} recorded"
+    )
+    for i, (g, w) in enumerate(zip(got_rows, want_rows)):
+        ctx = f"[{path}] row {i}"
+        assert g["mode"] == w["mode"], ctx
+        for f in _INT_FIELDS:
+            assert int(g[f]) == w[f], f"{ctx}: {f}"
+        for f in _FLOAT_FIELDS:
+            # host-side f64: JSON round-trips repr exactly -> bitwise
+            assert float(g[f]) == w[f], f"{ctx}: {f}"
+        for f in _INTLIST_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(g[f], np.int64), np.asarray(w[f], np.int64),
+                err_msg=f"{ctx}: {f}")
+        for f in _FLOATLIST_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(g[f], np.float64), np.asarray(w[f], np.float64),
+                err_msg=f"{ctx}: {f}")
+
+
+def _assert_params_match(params, want):
+    leaves = jax.tree_util.tree_leaves(params)
+    assert [list(l.shape) for l in leaves] == want["shapes"]
+    for l, (flat, shape) in zip(leaves, zip(want["leaves"], want["shapes"])):
+        np.testing.assert_allclose(
+            np.asarray(l, np.float32),
+            np.asarray(flat, np.float32).reshape(shape),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("path", ["run", "events"])
+def test_golden_trace_replay(name, path):
+    fixture_path = DATA_DIR / f"golden_async_{name}.json"
+    fixture = json.loads(fixture_path.read_text())
+    assert fixture["spec"] == SCENARIOS[name], (
+        f"{fixture_path} was recorded under a different scenario spec; "
+        "regenerate with `python -m tests.test_golden_trace` if the "
+        "change is intentional"
+    )
+    hist, params = _run_scenario(SCENARIOS[name], path=path)
+    _assert_rows_match([_row_to_json(r) for r in hist], fixture["history"],
+                       path=path)
+    _assert_params_match(params, fixture["params"])
+
+
+def test_cocktail_trace_exercises_fault_paths():
+    """The recorded cocktail is only a regression guard if the fault
+    machinery actually fired: the fixture must contain a degraded/timer
+    flush (keep path) and non-trivial staleness."""
+    fixture = json.loads(
+        (DATA_DIR / "golden_async_cocktail.json").read_text())
+    rows = fixture["history"]
+    sizes = {len(r["learners"]) for r in rows}
+    assert any(s < SCENARIOS["cocktail"]["config"]["buffer_size"]
+               for s in sizes), "no under-quorum/degraded flush recorded"
+    assert any(r["version_staleness_max"] > 0 for r in rows)
+
+
+if __name__ == "__main__":
+    for name in sorted(SCENARIOS):
+        path, n = record(name)
+        print(f"wrote {path} ({n} aggregations)")
